@@ -1,0 +1,78 @@
+"""Shared benchmark utilities: timing + the FL experiment harness used by
+the Table II/IV and Fig 2/3 reproductions (synthetic CIFAR-like data —
+offline container; see EXPERIMENTS.md §Repro-validity)."""
+from __future__ import annotations
+
+import time
+from typing import Callable, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.flocora import FLoCoRAConfig
+from repro.core.lora import LoRAConfig
+from repro.data import SyntheticVision, lda_partition
+from repro.fl import ClientConfig, FLServer, ServerConfig
+from repro.models.resnet import ResNetConfig, init as rinit, loss_fn, \
+    apply as rapply
+
+
+def time_us(fn: Callable, *args, iters: int = 20, warmup: int = 3) -> float:
+    for _ in range(warmup):
+        jax.block_until_ready(fn(*args))
+    t0 = time.perf_counter()
+    for _ in range(iters):
+        out = fn(*args)
+    jax.block_until_ready(out)
+    return (time.perf_counter() - t0) / iters * 1e6
+
+
+def fl_experiment(arch: str = "resnet8", rank: int = 32,
+                  alpha: Optional[float] = None, mode: str = "flocora",
+                  quant_bits: Optional[int] = None, rounds: int = 10,
+                  n_clients: int = 40, clients_per_round: int = 4,
+                  n_train: int = 4000, lda_alpha: float = 0.5,
+                  local_epochs: int = 1, seed: int = 0,
+                  stem_mode: str = "dense", fc_mode: str = "dense",
+                  norms_trained: bool = True, eval_every: int = 2,
+                  error_feedback: bool = False) -> dict:
+    """One FL run on the synthetic vision task; returns history + TCC."""
+    rng = np.random.default_rng(seed)
+    sv = SyntheticVision(seed=0)
+    y = rng.integers(0, 10, n_train)
+    x = sv.sample(rng, y).astype(np.float32)
+    parts = lda_partition(y, n_clients, alpha=lda_alpha, seed=seed)
+    data = [{"x": x[p], "y": y[p].astype(np.int32)} for p in parts]
+    yt = rng.integers(0, 10, 1000)
+    xt = jnp.asarray(sv.sample(rng, yt))
+
+    a = alpha if alpha is not None else 16.0 * rank
+    cfg = ResNetConfig(arch=arch, mode=mode,
+                       lora=LoRAConfig(rank=rank, alpha=a),
+                       stem_mode=stem_mode, fc_mode=fc_mode,
+                       norms_trained=norms_trained)
+    model = rinit(jax.random.PRNGKey(seed), cfg)
+    pred = jax.jit(lambda f, t, xx: jnp.argmax(rapply(f, t, cfg, xx), -1))
+
+    def eval_fn(f, t):
+        p = np.asarray(pred(f, t, xt))
+        return {"test_acc": float((p == yt).mean())}
+
+    srv = FLServer(
+        model, lambda f, t, b: loss_fn(f, t, cfg, b), data,
+        ServerConfig(rounds=rounds, n_clients=n_clients,
+                     clients_per_round=clients_per_round, seed=seed,
+                     eval_every=eval_every),
+        ClientConfig(local_epochs=local_epochs, batch_size=32, lr=0.01,
+                     momentum=0.9),
+        FLoCoRAConfig(rank=rank, alpha=a, quant_bits=quant_bits,
+                      error_feedback=error_feedback),
+        eval_fn)
+    hist = srv.run()
+    accs = [h["test_acc"] for h in hist if "test_acc" in h]
+    return {"history": hist,
+            "final_acc": accs[-1] if accs else None,
+            "best_acc": max(accs) if accs else None,
+            "round_bytes": srv.round_bytes_per_client,
+            "tcc_bytes": rounds * srv.round_bytes_per_client}

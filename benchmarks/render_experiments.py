@@ -1,0 +1,100 @@
+"""Fills EXPERIMENTS.md placeholders from the results caches:
+TABLE_ROOFLINE_SINGLE, PERF_SECTION, FL_ROUND_TABLE."""
+import json
+import os
+
+
+def load(tag=None):
+    recs = []
+    for fn in sorted(os.listdir("results/dryrun")):
+        if fn.endswith(".json"):
+            r = json.load(open(os.path.join("results/dryrun", fn)))
+            if tag is None or r.get("tag") == tag:
+                recs.append(r)
+    return recs
+
+
+def roofline_table() -> str:
+    from benchmarks.roofline_report import fmt_table
+    return "\n".join(fmt_table(load("baseline"), "pod16x16"))
+
+
+def _fmt(r):
+    t = r["roofline"]
+    return (f"peak {r['memory']['peak_bytes'] / 2**30:.2f} GiB | "
+            f"t_c {t['t_compute_s']:.2e} | t_m {t['t_memory_s']:.2e} | "
+            f"t_coll {t['t_collective_s']:.2e} | {t['dominant']}")
+
+
+def perf_section() -> str:
+    recs = load()
+    by = {}
+    for r in recs:
+        if r["status"] == "ok" and r["mesh"] == "pod16x16":
+            by[(r["arch"], r["shape"], r["tag"])] = r
+    out = []
+    for arch, shape, variants in [
+        ("nemotron-4-340b", "train_4k",
+         ["int8_base", "micro_half", "micro_half_int8", "xent2048",
+          "int8_xent2048"]),
+        ("deepseek-v2-236b", "prefill_32k",
+         ["int8_base", "cap1.0", "cap1.0_int8", "kvchunk4096"]),
+        ("minitron-4b", "train_4k",
+         ["int8_base", "xent2048", "micro_half", "int8_xent2048",
+          "kvchunk4096"]),
+        ("llama4-maverick-400b-a17b", "prefill_32k", ["int8_base"]),
+    ]:
+        base = by.get((arch, shape, "baseline"))
+        if not base:
+            continue
+        out.append(f"\n**{arch} × {shape}**\n")
+        out.append(f"- baseline: {_fmt(base)}")
+        bdom = max(base["roofline"]["t_compute_s"],
+                   base["roofline"]["t_memory_s"],
+                   base["roofline"]["t_collective_s"])
+        for v in variants:
+            r = by.get((arch, shape, v))
+            if not r:
+                continue
+            vdom = max(r["roofline"]["t_compute_s"],
+                       r["roofline"]["t_memory_s"],
+                       r["roofline"]["t_collective_s"])
+            delta = (bdom - vdom) / bdom * 100
+            out.append(f"- {v}: {_fmt(r)}  (dominant-term Δ "
+                       f"{delta:+.1f}%)")
+    return "\n".join(out)
+
+
+def fl_round_table() -> str:
+    rows = ["| exchange | total collective wire bytes/chip | "
+            "u8 all-gathers | Δ vs fp32 |", "|---|---|---|---|"]
+    recs = {r["shape"]: r for r in load("fl_round")
+            if r["status"] == "ok"}
+    base = recs.get("fl_round_bNone")
+    for name, key in [("fp32", "fl_round_bNone"), ("int8", "fl_round_b8"),
+                      ("int4", "fl_round_b4"), ("int2", "fl_round_b2")]:
+        r = recs.get(key)
+        if not r:
+            continue
+        d = ""
+        if base and key != "fl_round_bNone":
+            d = f"−{(base['collective_total'] - r['collective_total']) / 1e6:.0f} MB"
+        rows.append(f"| {name} | {r['collective_total']:.3e} |"
+                    f" {r['u8_allgather_ops']} | {d} |")
+    return "\n".join(rows)
+
+
+def main():
+    with open("EXPERIMENTS.md") as f:
+        doc = f.read()
+    doc = doc.replace("TABLE_ROOFLINE_SINGLE", roofline_table())
+    doc = doc.replace("PERF_SECTION_TABLES", perf_section())
+    doc = doc.replace("PERF_SECTION", perf_section())
+    doc = doc.replace("FL_ROUND_TABLE", fl_round_table())
+    with open("EXPERIMENTS.md", "w") as f:
+        f.write(doc)
+    print("rendered EXPERIMENTS.md")
+
+
+if __name__ == "__main__":
+    main()

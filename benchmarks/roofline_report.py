@@ -1,0 +1,73 @@
+"""Renders the §Dry-run / §Roofline tables for EXPERIMENTS.md from the
+results/dryrun JSON cache (written by repro.launch.dryrun)."""
+import json
+import os
+import sys
+
+
+def load(results_dir: str = "results/dryrun", tag: str = "baseline"):
+    recs = []
+    if not os.path.isdir(results_dir):
+        return recs
+    for fn in sorted(os.listdir(results_dir)):
+        if fn.endswith(".json"):
+            r = json.load(open(os.path.join(results_dir, fn)))
+            if r.get("tag", "baseline") == tag:
+                recs.append(r)
+    return recs
+
+
+def fmt_table(recs, mesh="pod16x16") -> list[str]:
+    lines = ["| arch | shape | step | peak GiB/chip | t_compute | t_memory"
+             " | t_collective | dominant | useful-FLOP ratio |",
+             "|---|---|---|---|---|---|---|---|---|"]
+    for r in recs:
+        if r["mesh"] != mesh:
+            continue
+        if r["status"] == "skipped":
+            lines.append(f"| {r['arch']} | {r['shape']} | — | — | — | — |"
+                         f" — | SKIP | {r['skip_reason'][:40]} |")
+            continue
+        if r["status"] != "ok":
+            lines.append(f"| {r['arch']} | {r['shape']} | {r['step']} |"
+                         f" ERROR | | | | | {r['error'][:40]} |")
+            continue
+        t = r["roofline"]
+        lines.append(
+            f"| {r['arch']} | {r['shape']} | {r['step']} |"
+            f" {r['memory']['peak_bytes'] / 2**30:.2f} |"
+            f" {t['t_compute_s']:.3e} | {t['t_memory_s']:.3e} |"
+            f" {t['t_collective_s']:.3e} | {t['dominant']} |"
+            f" {r['useful_flops_ratio']:.2f} |")
+    return lines
+
+
+def run() -> list[str]:
+    recs = load()
+    rows = []
+    ok = sum(1 for r in recs if r["status"] == "ok")
+    skip = sum(1 for r in recs if r["status"] == "skipped")
+    err = sum(1 for r in recs if r["status"] == "error")
+    over = sum(1 for r in recs if r["status"] == "ok"
+               and r["memory"]["peak_bytes"] > 16 * 2**30)
+    rows.append(f"roofline/cells,0,ok={ok} skipped={skip} errors={err} "
+                f"over_16GiB={over}")
+    for r in recs:
+        if r["status"] == "ok" and r["mesh"] == "pod16x16":
+            t = r["roofline"]
+            dom = max(t["t_compute_s"], t["t_memory_s"],
+                      t["t_collective_s"])
+            frac = t["t_compute_s"] / dom if dom else 0
+            rows.append(f"roofline/{r['arch']}_{r['shape']},0,"
+                        f"dominant={t['dominant']} "
+                        f"compute_fraction={frac:.3f} "
+                        f"peak_gib={r['memory']['peak_bytes'] / 2**30:.2f}")
+    return rows
+
+
+if __name__ == "__main__":
+    if "--markdown" in sys.argv:
+        mesh = "pod2x16x16" if "--multi" in sys.argv else "pod16x16"
+        print("\n".join(fmt_table(load(), mesh)))
+    else:
+        print("\n".join(run()))

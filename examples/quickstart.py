@@ -1,0 +1,63 @@
+"""Quickstart: FLoCoRA (paper Fig. 1) in ~40 lines.
+
+Federates a ResNet-8 over 20 clients on a synthetic CIFAR-like task,
+exchanging int8-quantized LoRA adapters, and prints the communication
+saving vs FedAvg (paper Tables I/III).
+
+    PYTHONPATH=src python examples/quickstart.py [--rounds 10]
+"""
+import argparse
+import sys
+
+import jax
+import numpy as np
+
+sys.path.insert(0, "src")
+
+from repro.core import messages
+from repro.core.flocora import FLoCoRAConfig
+from repro.core.lora import LoRAConfig
+from repro.core.quant import QuantConfig
+from repro.data import SyntheticVision, lda_partition
+from repro.fl import ClientConfig, FLServer, ServerConfig
+from repro.models.resnet import ResNetConfig, init as resnet_init, loss_fn
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--rounds", type=int, default=6)
+    args = ap.parse_args()
+
+    # data: 100 clients worth of non-IID (LDA 0.5) synthetic images
+    rng = np.random.default_rng(0)
+    sv = SyntheticVision(seed=0)
+    y = rng.integers(0, 10, 2000)
+    x = sv.sample(rng, y)
+    parts = lda_partition(y, 20, alpha=0.5)
+    data = [{"x": x[p], "y": y[p].astype(np.int32)} for p in parts]
+
+    # model: frozen random ResNet-8 + rank-32 adapters (alpha = 16r)
+    cfg = ResNetConfig(arch="resnet8", lora=LoRAConfig(rank=32, alpha=512.0))
+    model = resnet_init(jax.random.PRNGKey(0), cfg)
+
+    fedavg_bytes = messages.message_wire_bytes(
+        resnet_init(jax.random.PRNGKey(0),
+                    ResNetConfig(arch="resnet8", mode="fedavg"))["train"],
+        QuantConfig())
+    flocora_bytes = messages.message_wire_bytes(model["train"],
+                                                QuantConfig(bits=8))
+    print(f"message: FedAvg {fedavg_bytes/1e6:.2f} MB -> FLoCoRA+int8 "
+          f"{flocora_bytes/1e6:.3f} MB "
+          f"({fedavg_bytes/flocora_bytes:.1f}x smaller)")
+
+    server = FLServer(
+        model, lambda f, t, b: loss_fn(f, t, cfg, b), data,
+        ServerConfig(rounds=args.rounds, n_clients=20, clients_per_round=5),
+        ClientConfig(local_epochs=1, batch_size=32, lr=0.01),
+        FLoCoRAConfig(rank=32, alpha=512.0, quant_bits=8))
+    for h in server.run():
+        print(h)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,2 @@
+from repro.checkpoint.checkpoint import save, restore, latest_step, \
+    CheckpointManager

@@ -1,0 +1,2 @@
+from repro.configs.registry import REGISTRY, SHAPES, ArchEntry, get, \
+    cells, input_specs

@@ -1,0 +1,12 @@
+"""FLoCoRA core: LoRA adapters, affine message quantization, aggregation.
+
+Public API re-exports.
+"""
+from repro.core.flocora import FLoCoRAConfig, broadcast, client_uplink, \
+    server_round, round_wire_bytes, tcc
+from repro.core.lora import LoRAConfig, dense_lora_init, dense_lora_apply, \
+    dense_merge, conv_lora_init, conv_lora_apply, conv_merge, linear_init, \
+    linear_apply, linear_logical
+from repro.core.quant import QuantConfig, affine_qparams, quantize, \
+    dequantize, quant_dequant, pack_levels, unpack_levels
+from repro.core import messages, aggregation

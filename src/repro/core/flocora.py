@@ -1,0 +1,84 @@
+"""FLoCoRA high-level API (paper §III, Fig. 1).
+
+One communication round:
+  (1) server broadcasts global adapter tree  Δ̄_t L        (quantized)
+  (2) each sampled client k trains locally   Δ^k_{t+1} L
+  (3) client uploads its adapter tree                       (quantized)
+  (4) server FedAvg-aggregates:  Δ̄_{t+1} L = Σ_k (n_k/n) Δ^k_{t+1} L
+
+The base model W_initial is exchanged exactly once (round 0) and never
+updated — that is the whole trick. ``server_round``/``broadcast`` are the
+jittable pieces; orchestration (sampling, stragglers, faults) lives in
+``repro.fl``.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import aggregation, messages
+from repro.core.quant import QuantConfig
+
+Array = jax.Array
+
+
+@dataclasses.dataclass(frozen=True)
+class FLoCoRAConfig:
+    rank: int = 32
+    alpha: float = 512.0            # paper default: alpha = 16 * r
+    quant_bits: Optional[int] = None  # None | 8 | 4 | 2
+    error_feedback: bool = False    # beyond-paper EF on the client uplink
+    head_mode: str = "dense"        # 'dense' (paper) | 'lora' | 'frozen'
+
+    @property
+    def qcfg(self) -> QuantConfig:
+        return QuantConfig(bits=self.quant_bits)
+
+    @property
+    def scale(self) -> float:
+        return self.alpha / self.rank
+
+
+def broadcast(global_trainable: Any, cfg: FLoCoRAConfig) -> Any:
+    """Step (1): what clients reconstruct from the server message."""
+    return messages.roundtrip(global_trainable, cfg.qcfg)
+
+
+def client_uplink(trainable: Any, cfg: FLoCoRAConfig,
+                  ef_residual: Optional[Any] = None
+                  ) -> tuple[Any, Optional[Any]]:
+    """Step (3): what the server reconstructs from one client's message.
+
+    With error feedback enabled, the client compensates its own previous
+    quantization error (beyond-paper option)."""
+    if cfg.error_feedback and cfg.qcfg.enabled:
+        assert ef_residual is not None
+        return aggregation.ef_encode(trainable, ef_residual, cfg.qcfg)
+    return messages.roundtrip(trainable, cfg.qcfg), ef_residual
+
+
+def server_round(stacked_client_trainables: Any, weights: Array,
+                 cfg: FLoCoRAConfig) -> Any:
+    """Steps (3)+(4) fused: dequantize each client message and FedAvg.
+
+    `stacked_client_trainables` leaves have a leading K (clients) dim and
+    hold the *raw* client fp trees; quantization happens inside so the
+    whole round jits into one program (and, on TPU, lowers onto the fused
+    dequant+reduce Pallas kernel)."""
+    return aggregation.fedavg_quantized(stacked_client_trainables, weights,
+                                        cfg.qcfg)
+
+
+def round_wire_bytes(trainable: Any, cfg: FLoCoRAConfig) -> dict:
+    """Per-round, per-client message accounting (both directions equal)."""
+    one_way = messages.message_wire_bytes(trainable, cfg.qcfg)
+    return {"down_bytes": one_way, "up_bytes": one_way,
+            "round_bytes": 2 * one_way}
+
+
+def tcc(trainable: Any, cfg: FLoCoRAConfig, rounds: int) -> int:
+    """Paper Eq. 2: total communication cost for one client, R rounds."""
+    return messages.tcc_bytes(trainable, cfg.qcfg, rounds)

@@ -1,0 +1,128 @@
+"""FLoCoRA message codec: trainable tree <-> quantized wire message.
+
+Quantization rules (paper §IV, validated byte-exact against Tables III/IV):
+  * tensors with ndim >= 2 are quantized per *output channel* = last axis
+    (conv "per channel", FC "per column" in the paper's storage order);
+  * tensors with a leading layer-stack dim (ndim >= 3) get per-(layer,
+    channel) qparams via vmap — strictly better accuracy, same wire format;
+  * 1-D tensors (norm scales/biases, SSM vectors) are never quantized and
+    travel in fp32 — the paper's "normalization layers are not quantized";
+  * scale and zero-point travel as fp32 sidecars (2 * 4 bytes / channel).
+
+``encode``/``decode`` are jit-friendly; ``wire_bytes`` is the static
+accounting used by the TCC benchmarks.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import quant
+from repro.core.quant import QuantConfig
+
+Array = jax.Array
+
+CHANNEL_AXIS = -1   # output channel == last axis in this codebase's layouts
+
+
+@dataclasses.dataclass
+class EncodedLeaf:
+    q: Array              # uint8 levels (unpacked; packing is wire-only)
+    scale: Array
+    zp: Array
+    dtype: Any            # original dtype
+
+
+def _encode_leaf(x: Array, bits: int, per_stack: bool):
+    def enc2d(t):
+        s, z = quant.affine_qparams(t, bits, channel_axis=t.ndim - 1)
+        q = quant.quantize(t, s, z, bits, channel_axis=t.ndim - 1)
+        return q, s, z
+
+    if per_stack and x.ndim >= 3:
+        # per-(stack, channel) qparams (stacked LM layer tensors)
+        q, s, z = jax.vmap(enc2d)(x)
+    else:
+        q, s, z = enc2d(x)
+    return {"q": q, "scale": s, "zp": z}
+
+
+def _decode_leaf(enc: dict, ndim: int, dtype, per_stack: bool) -> Array:
+    def dec2d(q, s, z):
+        return quant.dequantize(q, s, z, channel_axis=q.ndim - 1, dtype=dtype)
+
+    if per_stack and ndim >= 3:
+        return jax.vmap(dec2d)(enc["q"], enc["scale"], enc["zp"])
+    return dec2d(enc["q"], enc["scale"], enc["zp"])
+
+
+def quantizable(x) -> bool:
+    """Paper rule: >=2-D tensors are quantized; vectors stay fp."""
+    return x.ndim >= 2
+
+
+def encode(tree: Any, cfg: QuantConfig) -> Any:
+    """Trainable tree -> message tree. Unquantized leaves pass through."""
+    if not cfg.enabled:
+        return tree
+
+    def enc(x):
+        if not quantizable(x):
+            return x
+        return _encode_leaf(x, cfg.bits, cfg.per_stack)
+
+    return jax.tree.map(enc, tree)
+
+
+def decode(msg: Any, cfg: QuantConfig, like: Any) -> Any:
+    """Message tree -> fp tree with the dtypes/structure of `like`."""
+    if not cfg.enabled:
+        return msg
+
+    def dec(ref, m):
+        if not quantizable(ref):
+            return m
+        return _decode_leaf(m, ref.ndim, ref.dtype, cfg.per_stack)
+
+    return jax.tree.map(dec, like, msg,
+                        is_leaf=lambda t: isinstance(t, dict) and "q" in t)
+
+
+def roundtrip(tree: Any, cfg: QuantConfig) -> Any:
+    """Quantize+dequantize: what the receiver reconstructs."""
+    if not cfg.enabled:
+        return tree
+    return decode(encode(tree, cfg), cfg, tree)
+
+
+# ---------------------------------------------------------------------------
+# Wire-byte accounting (static; shapes only)
+# ---------------------------------------------------------------------------
+
+def leaf_wire_bytes(shape: tuple[int, ...], bits: Optional[int],
+                    per_stack: bool = False) -> int:
+    n = int(np.prod(shape))
+    if bits is None or len(shape) < 2:
+        return n * quant.FP_BYTES
+    if per_stack and len(shape) >= 3:
+        channels = int(np.prod(shape[:-2])) * shape[-1]
+    else:
+        channels = shape[-1]          # paper rule: channel = last axis
+    payload = (n * bits + 7) // 8
+    return payload + channels * 2 * quant.FP_BYTES
+
+
+def message_wire_bytes(tree: Any, cfg: QuantConfig) -> int:
+    """Bytes for one direction of one round (paper's message size)."""
+    bits = cfg.bits if cfg.enabled else None
+    return sum(leaf_wire_bytes(tuple(x.shape), bits, cfg.per_stack)
+               for x in jax.tree.leaves(tree))
+
+
+def tcc_bytes(tree: Any, cfg: QuantConfig, rounds: int) -> int:
+    """Paper Eq. 2 generalized: 2 * R * message_bytes."""
+    return 2 * rounds * message_wire_bytes(tree, cfg)

@@ -1,0 +1,178 @@
+"""Affine (asymmetric) round-to-nearest quantization for FLoCoRA messages.
+
+Implements the paper's scheme (§IV, following Nagel et al. "A white paper
+on neural network quantization"): per-channel scale + zero-point for conv
+tensors (channel = dim 0 of the message tensor), per-column for FC, RTN,
+2/4/8-bit unsigned levels, fp32 scale/zero-point sidecar. Norm layers are
+never quantized.
+
+Bit-packing: sub-byte levels are packed little-endian into uint8 words
+(int4 -> 2/byte, int2 -> 4/byte) so message sizes match the wire format
+used in the paper's TCC accounting (Eq. 2 + sidecar overhead).
+
+All functions are jit-friendly (bits is static). The Pallas kernels in
+``repro.kernels`` implement fused versions of ``quantize``+``pack_levels``
+and ``unpack_levels``+``dequantize``; this module is the reference oracle.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+Array = jax.Array
+
+
+@dataclasses.dataclass(frozen=True)
+class QuantConfig:
+    """Quantization config for FLoCoRA messages.
+
+    bits: 2, 4, 8 or None (None = fp32 passthrough, the paper's "FP" rows).
+    channel_axis: axis along which scale/zero-point are computed.
+    symmetric: beyond-paper option (zero-point fixed at mid-level).
+    """
+    bits: Optional[int] = None
+    channel_axis: int = 0
+    symmetric: bool = False
+    # per_stack=True: separate qparams per leading-stack slice (finer, for
+    # stacked LM layer tensors); False (default) matches the paper exactly:
+    # channel = last axis, all other dims flattened.
+    per_stack: bool = False
+
+    @property
+    def enabled(self) -> bool:
+        return self.bits is not None
+
+    @property
+    def qmax(self) -> int:
+        assert self.bits is not None
+        return (1 << self.bits) - 1
+
+
+def _moveaxis_flat(x: Array, axis: int) -> Array:
+    """(..., C, ...) -> (C, rest) with channel first."""
+    x = jnp.moveaxis(x, axis, 0)
+    return x.reshape(x.shape[0], -1)
+
+
+def affine_qparams(x: Array, bits: int, channel_axis: int = 0,
+                   symmetric: bool = False) -> tuple[Array, Array]:
+    """Per-channel (scale, zero_point). zero_point is an integer level.
+
+    Asymmetric: levels q in [0, 2^bits-1]; x ~= scale * (q - zp).
+    Degenerate channels (max == min) get scale = 1 so dequant returns the
+    constant exactly (q == zp everywhere).
+    """
+    qmax = (1 << bits) - 1
+    xf = _moveaxis_flat(x.astype(jnp.float32), channel_axis)
+    xmin = jnp.min(xf, axis=1)
+    xmax = jnp.max(xf, axis=1)
+    if symmetric:
+        amax = jnp.maximum(jnp.abs(xmin), jnp.abs(xmax))
+        scale = jnp.where(amax > 0, (2.0 * amax) / qmax, 1.0)
+        zp = jnp.full_like(scale, (qmax + 1) // 2)
+    else:
+        # make sure 0 is representable (standard affine convention)
+        xmin = jnp.minimum(xmin, 0.0)
+        xmax = jnp.maximum(xmax, 0.0)
+        rng = xmax - xmin
+        scale = jnp.where(rng > 0, rng / qmax, 1.0)
+        zp = jnp.clip(jnp.round(-xmin / scale), 0, qmax)
+    return scale, zp
+
+
+def quantize(x: Array, scale: Array, zp: Array, bits: int,
+             channel_axis: int = 0) -> Array:
+    """fp -> unsigned levels (stored as uint8), RTN."""
+    qmax = (1 << bits) - 1
+    shape = [1] * x.ndim
+    shape[channel_axis] = x.shape[channel_axis]
+    s = scale.reshape(shape)
+    z = zp.reshape(shape)
+    q = jnp.round(x.astype(jnp.float32) / s) + z
+    return jnp.clip(q, 0, qmax).astype(jnp.uint8)
+
+
+def dequantize(q: Array, scale: Array, zp: Array,
+               channel_axis: int = 0,
+               dtype: jnp.dtype = jnp.float32) -> Array:
+    shape = [1] * q.ndim
+    shape[channel_axis] = q.shape[channel_axis]
+    s = scale.reshape(shape)
+    z = zp.reshape(shape)
+    return ((q.astype(jnp.float32) - z) * s).astype(dtype)
+
+
+def quant_dequant(x: Array, cfg: QuantConfig) -> Array:
+    """RTN round-trip — what the receiving end sees. fp passthrough if
+    quantization is disabled."""
+    if not cfg.enabled:
+        return x
+    scale, zp = affine_qparams(x, cfg.bits, cfg.channel_axis, cfg.symmetric)
+    q = quantize(x, scale, zp, cfg.bits, cfg.channel_axis)
+    return dequantize(q, scale, zp, cfg.channel_axis, x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# Bit packing (wire format)
+# ---------------------------------------------------------------------------
+
+def pack_levels(q: Array, bits: int) -> Array:
+    """Pack uint8 levels (< 2^bits) into a flat uint8 array, little-endian
+    within each byte. Pads the flattened tail with zeros."""
+    assert bits in (2, 4, 8)
+    flat = q.reshape(-1)
+    if bits == 8:
+        return flat
+    per = 8 // bits
+    pad = (-flat.shape[0]) % per
+    flat = jnp.pad(flat, (0, pad))
+    grp = flat.reshape(-1, per).astype(jnp.uint32)
+    shifts = jnp.arange(per, dtype=jnp.uint32) * bits
+    word = jnp.sum(grp << shifts[None, :], axis=1)
+    return word.astype(jnp.uint8)
+
+
+def unpack_levels(packed: Array, bits: int, n: int) -> Array:
+    """Inverse of pack_levels; returns first ``n`` levels as uint8."""
+    assert bits in (2, 4, 8)
+    if bits == 8:
+        return packed[:n]
+    per = 8 // bits
+    mask = (1 << bits) - 1
+    w = packed.astype(jnp.uint32)
+    shifts = jnp.arange(per, dtype=jnp.uint32) * bits
+    lv = (w[:, None] >> shifts[None, :]) & mask
+    return lv.reshape(-1)[:n].astype(jnp.uint8)
+
+
+# ---------------------------------------------------------------------------
+# Byte accounting (paper Eq. 2 + sidecar overhead; validated against
+# Tables III / IV — see benchmarks/table3_tcc.py)
+# ---------------------------------------------------------------------------
+
+FP_BYTES = 4  # paper communicates fp32
+
+
+def quantized_tensor_bytes(shape: tuple[int, ...], bits: int,
+                           channel_axis: int = 0) -> int:
+    """Wire bytes for one quantized tensor: packed payload (ceil per
+    tensor) + per-channel fp32 scale and zero-point."""
+    n = int(np.prod(shape))
+    channels = shape[channel_axis]
+    payload = (n * bits + 7) // 8
+    sidecar = channels * 2 * FP_BYTES
+    return payload + sidecar
+
+
+def fp_tensor_bytes(shape: tuple[int, ...]) -> int:
+    return int(np.prod(shape)) * FP_BYTES
+
+
+def tcc_bytes(message_bytes: int, rounds: int) -> int:
+    """Total communication cost for one client over `rounds` rounds
+    (down + up each round) — paper Eq. 2 generalized to mixed payloads."""
+    return 2 * rounds * message_bytes

@@ -1,0 +1,3 @@
+from repro.data.synthetic import SyntheticVision, synthetic_lm_batch, \
+    markov_lm_batch
+from repro.data.partition import lda_partition

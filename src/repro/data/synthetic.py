@@ -1,0 +1,88 @@
+"""Procedural datasets (the container is offline — no CIFAR-10 download).
+
+SyntheticVision: a learnable CIFAR-like task. Each class has a fixed
+random 32x32x3 template (low-frequency, via blurred noise); samples are
+template + per-sample noise + random shift/flip. A small CNN separates
+the classes easily, so FL convergence dynamics (FedAvg vs FLoCoRA vs
+quantized) are observable; absolute CIFAR-10 accuracies are NOT claimed
+(EXPERIMENTS.md §Repro-validity).
+
+markov_lm_batch: token stream from a random sparse Markov chain (per-state
+support of 8 next-tokens with Zipf weights) — gives an LM a learnable
+structure with a known entropy floor well below ln(V).
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import numpy as np
+
+Array = np.ndarray
+
+
+@dataclasses.dataclass
+class SyntheticVision:
+    n_classes: int = 10
+    image: int = 32
+    seed: int = 0
+    noise: float = 0.35
+
+    def __post_init__(self):
+        rng = np.random.default_rng(self.seed)
+        raw = rng.normal(size=(self.n_classes, self.image, self.image, 3))
+        # cheap low-pass: box-blur twice so templates have spatial structure
+        for _ in range(2):
+            raw = (raw + np.roll(raw, 1, 1) + np.roll(raw, -1, 1)
+                   + np.roll(raw, 1, 2) + np.roll(raw, -1, 2)) / 5.0
+        self.templates = (raw / raw.std()).astype(np.float32)
+
+    def sample(self, rng: np.random.Generator, labels: Array) -> Array:
+        """labels: (N,) -> images (N, 32, 32, 3) float32."""
+        t = self.templates[labels]
+        shift = rng.integers(-2, 3, size=(len(labels), 2))
+        out = np.empty_like(t)
+        for i in range(len(labels)):
+            out[i] = np.roll(t[i], tuple(shift[i]), axis=(0, 1))
+        flip = rng.random(len(labels)) < 0.5
+        out[flip] = out[flip, :, ::-1]
+        out += rng.normal(scale=self.noise, size=out.shape).astype(np.float32)
+        return out
+
+    def batch(self, rng: np.random.Generator, labels_pool: Array,
+              batch_size: int) -> dict:
+        idx = rng.integers(0, len(labels_pool), size=batch_size)
+        y = labels_pool[idx]
+        return {"x": self.sample(rng, y), "y": y.astype(np.int32)}
+
+
+_MARKOV_CACHE: dict = {}
+
+
+def _markov_tables(vocab: int, seed: int, support: int = 8):
+    key = (vocab, seed, support)
+    if key not in _MARKOV_CACHE:
+        rng = np.random.default_rng(seed)
+        nxt = rng.integers(0, vocab, size=(vocab, support))
+        w = (1.0 / np.arange(1, support + 1)) ** 1.2
+        w = w / w.sum()
+        _MARKOV_CACHE[key] = (nxt, w)
+    return _MARKOV_CACHE[key]
+
+
+def markov_lm_batch(rng: np.random.Generator, vocab: int, batch: int,
+                    seq: int, seed: int = 0) -> dict:
+    """{'tokens': (batch, seq+1) int32} from a sparse Markov chain."""
+    nxt, w = _markov_tables(vocab, seed)
+    toks = np.empty((batch, seq + 1), np.int32)
+    toks[:, 0] = rng.integers(0, vocab, size=batch)
+    choices = rng.choice(len(w), p=w, size=(batch, seq))
+    for t in range(seq):
+        toks[:, t + 1] = nxt[toks[:, t], choices[:, t]]
+    return {"tokens": toks}
+
+
+def synthetic_lm_batch(rng: np.random.Generator, vocab: int, batch: int,
+                       seq: int) -> dict:
+    """Uniform random tokens — used only for shape/throughput benchmarks."""
+    return {"tokens": rng.integers(0, vocab, size=(batch, seq + 1)
+                                   ).astype(np.int32)}

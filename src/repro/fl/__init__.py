@@ -1,0 +1,3 @@
+from repro.fl.client import ClientConfig, make_local_trainer
+from repro.fl.server import ServerConfig, FLServer
+from repro.fl.elastic import elastic_restore

@@ -1,0 +1,33 @@
+"""Elastic scaling: restore a logical checkpoint onto a DIFFERENT mesh.
+
+Checkpoints store unsharded host arrays (repro.checkpoint); a restarted
+job builds its own mesh (any shape whose axes divide the dims per the
+best-effort rules) and re-device_puts every leaf with the new
+NamedShardings derived from the same logical annotations. Nothing about
+the checkpoint depends on the old topology — scale 256 -> 512 chips (or
+down to 1 for a laptop repro) without conversion."""
+from __future__ import annotations
+
+from typing import Any, Optional
+
+import jax
+from jax.sharding import Mesh
+
+from repro.checkpoint import restore, latest_step
+from repro.utils.sharding import tree_shardings
+
+
+def elastic_restore(directory: str, like: dict[str, Any],
+                    logical: dict[str, Any], mesh: Mesh,
+                    rules: Optional[dict] = None,
+                    step: Optional[int] = None):
+    """like/logical: {'group': tree} / {'group': logical-annotation tree}.
+    Groups present in `logical` get mesh shardings; others land on host."""
+    if step is None:
+        step = latest_step(directory)
+        if step is None:
+            return None
+    shardings = {g: tree_shardings(logical[g], like[g], mesh, rules)
+                 for g in logical}
+    trees, man = restore(directory, step, like, shardings)
+    return step, trees, man

@@ -1,0 +1,12 @@
+"""Pallas TPU kernels for FLoCoRA's compute hot-spots.
+
+  quant_pack   — fused per-channel affine quantize + bit-pack (uplink)
+  dequant_agg  — fused unpack + dequantize + weighted aggregate (server)
+  lora_matmul  — fused y = x@W + (α/r)(x@a)@b (client forward)
+
+Each has a pure-jnp oracle in ref.py; tests sweep shapes/dtypes/bits in
+interpret mode (this container is CPU-only; TPU is the target).
+"""
+from repro.kernels.ops import quant_pack, dequant_agg, lora_matmul, \
+    to_channel_first_2d
+from repro.kernels import ref

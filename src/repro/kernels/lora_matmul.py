@@ -1,0 +1,67 @@
+"""Pallas TPU kernel: fused LoRA matmul  y = x@W + s*(x@a)@b.
+
+The FLoCoRA client forward hot loop. The low-rank correction distributes
+over the K (contraction) grid axis:  (x@a)@b = sum_k (x_k @ a_k) @ b, so
+each (bm, bn, bk) step adds  x_k@w_k + s*(x_k@a_k)@b_n  into the fp32
+output block — no scratch, one epilogue-free accumulation loop, and the
+rank-r side chain (r <= 128, one MXU pass) rides along with the dense
+matmul instead of a separate XLA fusion with its own HBM round-trip.
+
+Tiling: (M/bm, N/bn, K/bk) grid, K innermost; x (bm,bk), w (bk,bn),
+a (bk,r), b (r,bn) tiles in VMEM; all matmul dims multiples of 128 for
+the MXU (wrapper pads r up to 128 with zeros when needed).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+Array = jax.Array
+
+
+def _lora_matmul_kernel(x_ref, w_ref, a_ref, b_ref, out_ref, *, s: float,
+                        n_k: int):
+    kk = pl.program_id(2)
+    x = x_ref[...]
+    acc = jnp.dot(x, w_ref[...], preferred_element_type=jnp.float32)
+    h = jnp.dot(x, a_ref[...], preferred_element_type=jnp.float32)
+    acc = acc + s * jnp.dot(h.astype(b_ref.dtype), b_ref[...],
+                            preferred_element_type=jnp.float32)
+
+    @pl.when(kk == 0)
+    def _init():
+        out_ref[...] = acc
+
+    @pl.when(kk > 0)
+    def _acc():
+        out_ref[...] += acc
+
+
+def lora_matmul_pallas(x: Array, w: Array, a: Array, b: Array, s: float, *,
+                       block_m: int = 256, block_n: int = 256,
+                       block_k: int = 512,
+                       interpret: bool = False) -> Array:
+    """x (M, K); w (K, N); a (K, r); b (r, N). Returns bf16 (M, N)."""
+    m, k = x.shape
+    n = w.shape[1]
+    r = a.shape[1]
+    bm, bn, bk = min(block_m, m), min(block_n, n), min(block_k, k)
+    assert m % bm == 0 and n % bn == 0 and k % bk == 0
+    grid = (m // bm, n // bn, k // bk)
+    out = pl.pallas_call(
+        functools.partial(_lora_matmul_kernel, s=s, n_k=k // bk),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bm, bk), lambda i, j, kk: (i, kk)),
+            pl.BlockSpec((bk, bn), lambda i, j, kk: (kk, j)),
+            pl.BlockSpec((bk, r), lambda i, j, kk: (kk, 0)),
+            pl.BlockSpec((r, bn), lambda i, j, kk: (0, j)),
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j, kk: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((m, n), jnp.float32),
+        interpret=interpret,
+    )(x, w, a, b)
+    return out.astype(x.dtype)

@@ -1,0 +1,89 @@
+"""Jit'd public wrappers for the Pallas kernels.
+
+Pad-to-alignment, channel-first reshaping from arbitrary tensors, and
+backend dispatch: on TPU the kernels compile natively; on CPU (this
+container) they run in interpret mode — same kernel body, Python
+execution, used by the test-suite oracles.
+"""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.kernels import ref
+from repro.kernels.dequant_agg import dequant_agg_pallas
+from repro.kernels.lora_matmul import lora_matmul_pallas
+from repro.kernels.quant_pack import quant_pack_pallas
+
+Array = jax.Array
+
+
+def _interpret() -> bool:
+    return jax.default_backend() != "tpu"
+
+
+def _pad_to(x: Array, mult: int, axis: int) -> Array:
+    pad = (-x.shape[axis]) % mult
+    if pad == 0:
+        return x
+    widths = [(0, 0)] * x.ndim
+    widths[axis] = (0, pad)
+    return jnp.pad(x, widths)
+
+
+@partial(jax.jit, static_argnames=("bits", "block_c"))
+def quant_pack(x2d: Array, bits: int, block_c: int = 8):
+    """x2d: (C, N) channel-first fp32 view of a message tensor."""
+    per = 32 // bits
+    lane = per * 128
+    xp = _pad_to(_pad_to(x2d, block_c, 0), lane, 1)
+    packed, scale, zp = quant_pack_pallas(xp, bits, block_c=block_c,
+                                          interpret=_interpret())
+    c = x2d.shape[0]
+    nw = x2d.shape[1] * bits // 32 if x2d.shape[1] % per == 0 else None
+    return packed[:c], scale[:c], zp[:c]
+
+
+@partial(jax.jit, static_argnames=("bits", "block_c"))
+def dequant_agg(packed: Array, scale: Array, zp: Array, weights: Array,
+                bits: int, block_c: int = 8) -> Array:
+    kp = _pad_to(packed, block_c, 1)
+    sp = _pad_to(scale, block_c, 1)
+    zpp = _pad_to(zp, block_c, 1)
+    out = dequant_agg_pallas(kp, sp, jnp.where(sp > 0, zpp, 0.0), weights,
+                             bits, block_c=block_c,
+                             interpret=_interpret())
+    return out[: packed.shape[1]]
+
+
+@partial(jax.jit, static_argnames=("s",))
+def lora_matmul(x: Array, w: Array, a: Array, b: Array, s: float) -> Array:
+    """Fused y = x@w + s*(x@a)@b. Pads r to 128 lanes; picks MXU-aligned
+    blocks that divide the (padded) problem."""
+    m, k = x.shape
+    n = w.shape[1]
+    r = a.shape[1]
+    rp = max(128, ((r + 127) // 128) * 128)
+    ap = _pad_to(a, rp, 1)
+    bp = _pad_to(b, rp, 0)
+
+    def blk(dim, target):
+        t = min(target, dim)
+        while dim % t:
+            t //= 2
+        return max(t, 1)
+
+    bm, bn, bk = blk(m, 256), blk(n, 256), blk(k, 512)
+    return lora_matmul_pallas(x, w, ap, bp, s, block_m=bm, block_n=bn,
+                              block_k=bk, interpret=_interpret())
+
+
+# convenience: channel-first 2D view of an arbitrary message tensor
+def to_channel_first_2d(x: Array) -> Array:
+    """(..., C) -> (C, prod(...)) — matches the codec's last-axis-channel
+    convention."""
+    xm = jnp.moveaxis(x, -1, 0)
+    return xm.reshape(xm.shape[0], -1)

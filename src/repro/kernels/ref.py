@@ -1,0 +1,67 @@
+"""Pure-jnp oracles for the Pallas kernels (the correctness contracts).
+
+Layouts (kernel-facing, channel-FIRST 2D views — callers reshape):
+  quant_pack:  x (C, N) -> packed (C, N*bits/32) uint32, scale (C,), zp (C,)
+  dequant_agg: packed (K, C, Nw) uint32, scale/zp (K, C), weights (K,)
+               -> out (C, N) fp32  = sum_k w_k * dequant_k
+  lora_matmul: x (M, K), w (K, N), a (K, r), b (r, N), s
+               -> x@w + s*(x@a)@b  (bf16 in, fp32 accum, bf16 out)
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+Array = jax.Array
+
+
+def _qparams_rowwise(x: Array, bits: int):
+    qmax = (1 << bits) - 1
+    xmin = jnp.minimum(jnp.min(x, axis=1), 0.0)
+    xmax = jnp.maximum(jnp.max(x, axis=1), 0.0)
+    rng = xmax - xmin
+    scale = jnp.where(rng > 0, rng / qmax, 1.0)
+    zp = jnp.clip(jnp.round(-xmin / scale), 0, qmax)
+    return scale, zp
+
+
+def pack_words(levels: Array, bits: int) -> Array:
+    """levels (C, N) uint32 -> (C, N*bits/32) uint32, little-endian."""
+    per = 32 // bits
+    c, n = levels.shape
+    assert n % per == 0
+    grp = levels.reshape(c, n // per, per).astype(jnp.uint32)
+    shifts = (jnp.arange(per, dtype=jnp.uint32) * bits)[None, None, :]
+    return jnp.sum(grp << shifts, axis=-1).astype(jnp.uint32)
+
+
+def unpack_words(packed: Array, bits: int) -> Array:
+    per = 32 // bits
+    mask = jnp.uint32((1 << bits) - 1)
+    shifts = (jnp.arange(per, dtype=jnp.uint32) * bits)
+    lv = (packed[..., None] >> shifts) & mask
+    return lv.reshape(*packed.shape[:-1], packed.shape[-1] * per)
+
+
+def quant_pack_ref(x: Array, bits: int):
+    """x (C, N) fp32. Returns (packed uint32 (C, N*bits/32), scale, zp)."""
+    scale, zp = _qparams_rowwise(x.astype(jnp.float32), bits)
+    qmax = (1 << bits) - 1
+    q = jnp.clip(jnp.round(x / scale[:, None]) + zp[:, None], 0, qmax)
+    return pack_words(q.astype(jnp.uint32), bits), scale, zp
+
+
+def dequant_agg_ref(packed: Array, scale: Array, zp: Array,
+                    weights: Array, bits: int) -> Array:
+    """packed (K, C, Nw); scale/zp (K, C); weights (K,) -> (C, N) fp32."""
+    lv = unpack_words(packed, bits).astype(jnp.float32)   # (K, C, N)
+    deq = (lv - zp[..., None]) * scale[..., None]
+    return jnp.einsum("k,kcn->cn", weights.astype(jnp.float32), deq)
+
+
+def lora_matmul_ref(x: Array, w: Array, a: Array, b: Array,
+                    s: float) -> Array:
+    acc = x.astype(jnp.float32) @ w.astype(jnp.float32)
+    h = x.astype(jnp.float32) @ a.astype(jnp.float32)
+    acc = acc + s * (h @ b.astype(jnp.float32))
+    return acc.astype(x.dtype)

@@ -1,0 +1,91 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+# ^ MUST precede every other import: jax locks the device count on first
+#   init. 512 host devices back the (2,16,16) multi-pod production mesh.
+import argparse
+import json
+import sys
+
+from repro.configs import registry
+
+
+def main() -> int:
+    p = argparse.ArgumentParser(
+        description="AOT multi-pod dry-run: lower+compile every "
+                    "(arch x shape x mesh) cell; record memory/cost/"
+                    "collective analysis for the roofline.")
+    p.add_argument("--arch", default=None, help="arch id (default: all)")
+    p.add_argument("--shape", default=None,
+                   choices=[None, *registry.SHAPES], help="shape cell")
+    p.add_argument("--mesh", default="single",
+                   choices=["single", "multi", "both"])
+    p.add_argument("--tag", default="baseline")
+    p.add_argument("--microbatch", type=int, default=None)
+    p.add_argument("--seq-parallel", dest="sp", action="store_true",
+                   default=None)
+    p.add_argument("--no-seq-parallel", dest="sp", action="store_false")
+    p.add_argument("--list", action="store_true", help="list cells")
+    p.add_argument("--fl-round", action="store_true",
+                   help="lower the multi-pod FL server round instead")
+    p.add_argument("--bits", type=int, default=None)
+    args = p.parse_args()
+
+    if args.list:
+        for c in registry.cells():
+            print(c)
+        return 0
+
+    from repro.launch import dryrun_lib, steps as steps_lib
+
+    if args.fl_round:
+        failures = 0
+        for bits in ([args.bits] if args.bits else [None, 8, 4, 2]):
+            for arch in ([args.arch] if args.arch else ["minitron-4b"]):
+                rec = dryrun_lib.run_fl_round(arch, bits=bits,
+                                              tag=args.tag
+                                              if args.tag != "baseline"
+                                              else "fl_round")
+                print(f"[fl_round b={bits}] {arch}: {rec['status']} "
+                      + (f"coll={rec['collective_total']:.3e} "
+                         f"u8_ag={rec['u8_allgather_ops']}"
+                         if rec['status'] == 'ok'
+                         else rec.get('error', '')[:200]), flush=True)
+                failures += rec["status"] == "error"
+        return 1 if failures else 0
+
+    plan = None
+    cells = [c for c in registry.cells()
+             if (args.arch is None or c["arch"] == args.arch)
+             and (args.shape is None or c["shape"] == args.shape)]
+    meshes = {"single": [False], "multi": [True],
+              "both": [False, True]}[args.mesh]
+    failures = 0
+    for c in cells:
+        if args.microbatch is not None or args.sp is not None:
+            base = steps_lib.plan_for(c["arch"], c["shape"])
+            plan = steps_lib.CellPlan(
+                microbatch=args.microbatch or base.microbatch,
+                seq_parallel=base.seq_parallel if args.sp is None
+                else args.sp)
+        for mp in meshes:
+            rec = dryrun_lib.run_cell(c["arch"], c["shape"], multi_pod=mp,
+                                      plan=plan, tag=args.tag)
+            status = rec["status"]
+            extra = ""
+            if status == "ok":
+                m = rec["memory"]
+                extra = (f" peak={m['peak_bytes']/2**30:.2f}GiB"
+                         f" dominant={rec['roofline']['dominant']}"
+                         f" compile={rec['compile_s']}s")
+            elif status == "error":
+                extra = " " + rec["error"][:200]
+                failures += 1
+            elif status == "skipped":
+                extra = f" ({rec['skip_reason'][:60]})"
+            print(f"[{rec['mesh']}] {c['arch']} x {c['shape']}: "
+                  f"{status}{extra}", flush=True)
+    return 1 if failures else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

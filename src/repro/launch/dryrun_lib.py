@@ -1,0 +1,215 @@
+"""Dry-run core: AOT lower + compile one (arch x shape x mesh) cell,
+extract memory/cost/collective analysis, append to a JSON cache.
+
+Import AFTER the XLA device-count flag is set (dryrun.py does this in its
+first two lines; tests set a smaller count in their own subprocess)."""
+from __future__ import annotations
+
+import json
+import os
+import time
+import traceback
+from typing import Any, Optional
+
+import numpy as np
+
+import jax
+
+from repro.configs import registry
+from repro.launch import steps as steps_lib
+from repro.launch.mesh import make_production_mesh
+from repro.roofline.analysis import collective_bytes, roofline_terms, HW
+from repro.roofline.hlo_cost import analyze_hlo
+from repro.utils.sharding import num_chips
+
+RESULTS_DIR = os.environ.get("DRYRUN_RESULTS", "results/dryrun")
+
+
+def _active_params(entry, cfg) -> tuple[int, int]:
+    """(total_params, active_params_per_token) — active discounts MoE
+    experts to top_k(+shared) and subtracts the embedding gather."""
+    from repro.models import encdec as ED
+    from repro.models import lm as LM
+    from repro.utils.tree import tree_size
+    mod = ED if entry.kind == "encdec" else LM
+    shapes = jax.eval_shape(
+        lambda k: {g: t for g, t in mod.init(k, cfg).items()
+                   if g in ("frozen", "train")}, jax.random.PRNGKey(0))
+    total = tree_size(shapes["frozen"]) + tree_size(shapes["train"])
+    active = total
+    emb = cfg.vocab * cfg.d_model
+    active -= emb                      # embedding gather is not a matmul
+    moe = getattr(cfg, "moe", None)
+    if moe is not None:
+        n_moe_layers = cfg.n_layers // getattr(cfg, "moe_every", 1)
+        per_expert = tree_size(jax.eval_shape(
+            lambda k: __import__("repro.models.moe", fromlist=["x"])
+            .moe_init(k, moe, "lora",
+                      cfg.lora)[0], jax.random.PRNGKey(0))) // moe.n_experts
+        inactive = n_moe_layers * per_expert * (moe.n_experts - moe.top_k)
+        active -= inactive
+    return total, active
+
+
+def run_cell(arch: str, shape: str, *, multi_pod: bool,
+             plan: Optional[steps_lib.CellPlan] = None,
+             tag: str = "baseline",
+             save: bool = True) -> dict:
+    entry = registry.get(arch)
+    cell_info = [c for c in registry.cells()
+                 if c["arch"] == arch and c["shape"] == shape][0]
+    mesh_name = "pod2x16x16" if multi_pod else "pod16x16"
+    rec: dict[str, Any] = {"arch": arch, "shape": shape, "mesh": mesh_name,
+                           "tag": tag, "step": cell_info["step"]}
+    if cell_info["skip"]:
+        rec.update({"status": "skipped",
+                    "skip_reason": cell_info["skip_reason"]})
+        if save:
+            _append(rec)
+        return rec
+
+    t0 = time.time()
+    try:
+        mesh = make_production_mesh(multi_pod=multi_pod)
+        built = steps_lib.build_cell(entry, shape, mesh, plan=plan)
+        with mesh:
+            jitted = jax.jit(
+                built["fn"],
+                in_shardings=built["in_shardings"],
+                out_shardings=built["out_shardings"],
+                donate_argnums=built["donate"] or ())
+            lowered = jitted.lower(*built["args"])
+            t_lower = time.time() - t0
+            compiled = lowered.compile()
+            t_compile = time.time() - t0 - t_lower
+
+        mem = compiled.memory_analysis()
+        xla_cost = compiled.cost_analysis()
+        hlo = compiled.as_text()
+        # loop-aware analysis: xla's cost_analysis counts while bodies
+        # once (EXPERIMENTS.md §Roofline methodology)
+        la = analyze_hlo(hlo)
+        cost = {"flops": la["flops"], "bytes accessed": la["bytes"]}
+        coll = {"total": la["collective_total"], "n_ops": 0,
+                **la["collectives"]}
+        chips = num_chips(mesh)
+        terms = roofline_terms(cost, coll, chips=chips)
+        terms["xla_raw_flops"] = float(xla_cost.get("flops", 0.0))
+        terms["xla_raw_bytes"] = float(xla_cost.get("bytes accessed", 0.0))
+
+        cfg = built["cfg"]
+        total, active = _active_params(entry, cfg)
+        info = registry.SHAPES[shape]
+        if cell_info["step"] == "train":
+            tokens = info["batch"] * info["seq"]
+            mf = 6.0 * active * tokens
+        elif cell_info["step"] == "prefill":
+            tokens = info["batch"] * info["seq"]
+            mf = 2.0 * active * tokens
+        else:
+            tokens = info["batch"]
+            mf = 2.0 * active * tokens
+        hlo_flops_global = terms["hlo_flops_per_chip"] * chips
+        rec.update({
+            "status": "ok",
+            "lower_s": round(t_lower, 1),
+            "compile_s": round(t_compile, 1),
+            "chips": chips,
+            "memory": {k: int(v) for k, v in {
+                "argument_bytes": mem.argument_size_in_bytes,
+                "output_bytes": mem.output_size_in_bytes,
+                "temp_bytes": mem.temp_size_in_bytes,
+                "peak_bytes": (mem.argument_size_in_bytes
+                               + mem.temp_size_in_bytes),
+            }.items()},
+            "roofline": terms,
+            "collectives": {k: float(v) for k, v in coll.items()},
+            "model_flops_global": mf,
+            "hlo_flops_global": hlo_flops_global,
+            "useful_flops_ratio": (mf / hlo_flops_global
+                                   if hlo_flops_global else None),
+            "params_total": total,
+            "params_active": active,
+            "plan": {
+                "microbatch": (plan or steps_lib.plan_for(arch, shape)
+                               ).microbatch,
+                "seq_parallel": (plan or steps_lib.plan_for(arch, shape)
+                                 ).seq_parallel,
+            },
+        })
+    except Exception as e:  # record failures — they are actionable bugs
+        rec.update({"status": "error", "error": f"{type(e).__name__}: {e}",
+                    "traceback": traceback.format_exc()[-2000:]})
+    if save:
+        _append(rec)
+    return rec
+
+
+def _append(rec: dict):
+    os.makedirs(RESULTS_DIR, exist_ok=True)
+    key = f"{rec['arch']}__{rec['shape']}__{rec['mesh']}__{rec['tag']}"
+    path = os.path.join(RESULTS_DIR, key + ".json")
+    with open(path, "w") as f:
+        json.dump(rec, f, indent=1, default=str)
+
+
+def load_all(results_dir: Optional[str] = None) -> list[dict]:
+    d = results_dir or RESULTS_DIR
+    if not os.path.isdir(d):
+        return []
+    out = []
+    for fn in sorted(os.listdir(d)):
+        if fn.endswith(".json"):
+            with open(os.path.join(d, fn)) as f:
+                out.append(json.load(f))
+    return out
+
+
+def run_fl_round(arch: str, *, bits, multi_pod: bool = True,
+                 clients_per_pod: int = 16, tag: str = "fl_round",
+                 save: bool = True) -> dict:
+    """Lower+compile the hierarchical multi-pod FL server round and
+    record the CROSS-POD wire bytes (the paper's compression expressed
+    in the collective schedule)."""
+    from repro.launch.fl_round import build_fl_round
+    entry = registry.get(arch)
+    mesh_name = "pod2x16x16" if multi_pod else "pod16x16"
+    rec: dict[str, Any] = {"arch": arch, "shape": f"fl_round_b{bits}",
+                           "mesh": mesh_name, "tag": tag,
+                           "step": "fl_round"}
+    t0 = time.time()
+    try:
+        mesh = make_production_mesh(multi_pod=multi_pod)
+        built = build_fl_round(entry, mesh, clients_per_pod=clients_per_pod,
+                               bits=bits)
+        with mesh:
+            jitted = jax.jit(built["fn"],
+                             in_shardings=built["in_shardings"])
+            compiled = jitted.lower(*built["args"]).compile()
+        hlo = compiled.as_text()
+        la = analyze_hlo(hlo)
+        mem = compiled.memory_analysis()
+        # cross-pod traffic: collectives whose replica group spans pods
+        # (group size == n_pods across the pod axis); approximate with
+        # per-kind totals + u8 share
+        import re
+        u8 = sum(
+            1 for l in hlo.splitlines()
+            if re.search(r"u8\[[\d,]*\][^=]*all-gather", l))
+        rec.update({
+            "status": "ok",
+            "compile_s": round(time.time() - t0, 1),
+            "collectives": {k: float(v) for k, v in
+                            la["collectives"].items()},
+            "collective_total": la["collective_total"],
+            "memory": {"peak_bytes": int(mem.argument_size_in_bytes
+                                         + mem.temp_size_in_bytes)},
+            "u8_allgather_ops": u8,
+            "bits": bits,
+        })
+    except Exception as e:
+        rec.update({"status": "error", "error": f"{type(e).__name__}: {e}",
+                    "traceback": traceback.format_exc()[-2000:]})
+    if save:
+        _append(rec)
+    return rec

@@ -1,0 +1,158 @@
+"""The paper's technique AT SCALE: a jittable multi-pod FL server round.
+
+Hierarchical aggregation mapped onto the production mesh (DESIGN.md §3):
+
+  stage 1 (intra-pod, ICI): each pod holds its cohort's client adapter
+    trees stacked (P, Kp, ...) — P sharded over 'pod', Kp over 'data'.
+    Client messages are RTN-dequantized (the uplink view) and
+    n_k-weighted-averaged; the reduction over Kp lowers to an in-pod
+    all-reduce over the cheap ICI 'data' axis only.
+
+  stage 2 (cross-pod, DCN): each pod QUANTIZES its partial aggregate and
+    the pods exchange the *packed uint8 levels + fp32 sidecars* — the
+    sharding constraint forces an all-gather of u8 tensors over the
+    'pod' axis, so the compiled collective schedule itself carries
+    FLoCoRA-compressed traffic across the slow inter-pod links (4x for
+    int8, 16x for int2 vs fp32 exchange). Both pods dequantize and
+    average.
+
+``build_fl_round`` returns the jit-ready pieces; the dry-run lowers it on
+the 2x16x16 mesh and the roofline records the cross-pod wire bytes for
+fp32 vs int8 vs int2 exchange (EXPERIMENTS.md §Perf).
+"""
+from __future__ import annotations
+
+from functools import partial
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.configs.registry import ArchEntry
+from repro.core import messages
+from repro.core import quant as quant_mod
+from repro.core.quant import QuantConfig
+from repro.models import encdec as ED
+from repro.models import lm as LM
+from repro.utils.sharding import tree_shardings, DEFAULT_RULES
+
+Array = jax.Array
+
+
+def _stack_spec(x: jax.ShapeDtypeStruct, p: int, kp: int
+                ) -> jax.ShapeDtypeStruct:
+    return jax.ShapeDtypeStruct((p, kp) + x.shape, x.dtype)
+
+
+def build_fl_round(entry: ArchEntry, mesh: Mesh, *, clients_per_pod: int = 16,
+                   bits: Optional[int] = 8) -> dict:
+    cfg = entry.full()
+    mod = ED if entry.kind == "encdec" else LM
+    shapes = jax.eval_shape(
+        lambda k: {g: t for g, t in mod.init(k, cfg).items()
+                   if g in ("frozen", "train")}, jax.random.PRNGKey(0))
+    train_shapes = shapes["train"]
+    logical = mod.logical(cfg)["train"]
+
+    n_pods = dict(zip(mesh.axis_names, mesh.devices.shape)).get("pod", 1)
+    kp = clients_per_pod
+    qcfg = QuantConfig(bits=bits) if bits else QuantConfig()
+
+    stacked_shapes = jax.tree.map(lambda x: _stack_spec(x, n_pods, kp),
+                                  train_shapes)
+
+    # shardings: client axes (pod, data); param dims follow the model's
+    # own logical rules shifted by the two stack dims
+    def stack_shard(logical_leaf, x):
+        from repro.utils.sharding import logical_to_spec
+        spec = logical_to_spec(("__pod", "__kp") + tuple(logical_leaf),
+                               x.shape, mesh,
+                               {**DEFAULT_RULES, "__pod": "pod",
+                                "__kp": "data"})
+        return NamedSharding(mesh, spec)
+
+    sh_stacked = jax.tree.map(
+        stack_shard, logical, stacked_shapes,
+        is_leaf=lambda t: isinstance(t, tuple) and all(
+            isinstance(e, (str, type(None))) for e in t))
+    from repro.utils.sharding import logical_to_spec
+    w_spec = jax.ShapeDtypeStruct((n_pods, kp), jnp.float32)
+    sh_w = NamedSharding(mesh, logical_to_spec(
+        ("__pod", "__kp"), (n_pods, kp), mesh,
+        {"__pod": "pod", "__kp": "data"}))
+
+    def fl_round(stacked_clients: Any, weights: Array) -> Any:
+        # ---- stage 1: uplink dequant + in-pod weighted mean ------------
+        recon = jax.vmap(jax.vmap(lambda t: messages.roundtrip(t, qcfg)))(
+            stacked_clients)
+        wsum = jnp.sum(weights, axis=1, keepdims=True)
+        wn = weights / jnp.maximum(wsum, 1e-8)
+
+        def pod_mean(x):
+            wr = wn.reshape(wn.shape + (1,) * (x.ndim - 2))
+            return jnp.sum(x.astype(jnp.float32) * wr, axis=1)  # (P, ...)
+
+        partial_ = jax.tree.map(pod_mean, recon)
+        if n_pods == 1:
+            return jax.tree.map(lambda x: x[0], partial_)
+
+        # ---- stage 2: quantized cross-pod exchange ---------------------
+        enc = jax.vmap(lambda t: messages.encode(t, qcfg))(partial_)
+        # wire format: bit-pack the levels (int2 -> 4 levels/byte) so the
+        # DCN gather carries exactly the paper's message bytes
+        is_q = lambda t: isinstance(t, dict) and "q" in t
+
+        def pack_leaf(d):
+            if not is_q(d):
+                return d
+            return {"q": jax.vmap(
+                        lambda q: quant_mod.pack_levels(q, qcfg.bits))(
+                        d["q"]),
+                    "scale": d["scale"], "zp": d["zp"],
+                    "_shape": d["q"].shape}
+
+        def unpack_leaf(d):
+            if not is_q(d):
+                return d
+            shape = d.pop("_shape")
+            n = int(np.prod(shape[1:]))
+            q = jax.vmap(lambda p: quant_mod.unpack_levels(
+                p, qcfg.bits, n).reshape(shape[1:]))(d["q"])
+            return {"q": q, "scale": d["scale"], "zp": d["zp"]}
+
+        if qcfg.enabled:
+            enc = jax.tree.map(pack_leaf, enc, is_leaf=is_q)
+        # the barrier pins quantize+pack BEFORE the cross-pod gather (XLA
+        # would otherwise sink the dequant across the collective and
+        # gather fp32)
+        shapes_aside = jax.tree.map(
+            lambda d: d.pop("_shape") if is_q(d) and "_shape" in d else None,
+            enc, is_leaf=is_q) if qcfg.enabled else None
+        enc = jax.lax.optimization_barrier(enc)
+
+        def expose(x):
+            # force replication over 'pod' => all-gather of the packed
+            # payload across DCN
+            return jax.lax.with_sharding_constraint(
+                x, NamedSharding(mesh, P(*(None,) * x.ndim)))
+
+        enc = jax.tree.map(expose, enc)
+        enc = jax.lax.optimization_barrier(enc)
+        if qcfg.enabled:
+            enc = jax.tree.map(
+                lambda d, sh: unpack_leaf({**d, "_shape": sh})
+                if is_q(d) else d,
+                enc, shapes_aside, is_leaf=is_q)
+        dec = jax.vmap(lambda t: messages.decode(t, qcfg, jax.tree.map(
+            lambda s: s[0], partial_)))(enc) if qcfg.enabled else enc
+        pod_w = wsum[:, 0] / jnp.sum(wsum)
+        return jax.tree.map(
+            lambda x: jnp.einsum("p...,p->...", x.astype(jnp.float32),
+                                 pod_w),
+            dec)
+
+    return {"fn": fl_round, "args": (stacked_shapes, w_spec),
+            "in_shardings": (sh_stacked, sh_w), "out_shardings": None,
+            "donate": (), "cfg": cfg}

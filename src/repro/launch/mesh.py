@@ -1,0 +1,28 @@
+"""Production meshes (defined as FUNCTIONS — importing this module never
+touches jax device state).
+
+Single pod:  (data=16, model=16)            = 256 chips (TPU v5e pod)
+Multi-pod:   (pod=2, data=16, model=16)     = 512 chips; the 'pod' axis
+crosses DCN — FLoCoRA's quantized adapter exchange is the only traffic
+that ever crosses it (DESIGN.md §3).
+"""
+from __future__ import annotations
+
+import numpy as np
+
+import jax
+from jax.sharding import Mesh
+
+
+def make_production_mesh(*, multi_pod: bool = False) -> Mesh:
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    n = int(np.prod(shape))
+    devices = np.asarray(jax.devices()[:n]).reshape(shape)
+    return Mesh(devices, axes)
+
+
+def make_host_mesh() -> Mesh:
+    """1-device mesh for smoke tests / laptop runs (elastic lower bound)."""
+    return Mesh(np.asarray(jax.devices()[:1]).reshape(1, 1),
+                ("data", "model"))

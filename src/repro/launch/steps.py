@@ -1,0 +1,351 @@
+"""Builds jittable, sharded step programs per (arch x shape x mesh).
+
+For each cell the builder returns (fn, arg_specs, in_shardings,
+out_shardings, donate) ready for jax.jit(...).lower(*arg_specs) — the
+dry-run compiles them AOT with ShapeDtypeStructs (no allocation) and the
+real trainer calls them with materialized params.
+
+Plans (memory policy) per cell:
+  * microbatch gradient accumulation (lax.scan) — scales activation
+    memory down by M for the big-arch train cells;
+  * seq_parallel — Megatron-SP-style residual-stream constraint
+    P(batch=('pod','data'), seq='model') so remat-saved activations are
+    sharded 16x on the tensor axis (required for nemotron-340b train);
+  * donate params/opt-state/caches for in-place update buffers.
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+from typing import Any, Callable, Optional
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.configs.registry import SHAPES, ArchEntry, input_specs
+from repro.models import encdec as ED
+from repro.models import lm as LM
+from repro.optim import adamw
+from repro.utils import pcontext
+from repro.utils.sharding import tree_shardings, DEFAULT_RULES
+
+Array = jax.Array
+
+
+@dataclasses.dataclass(frozen=True)
+class CellPlan:
+    microbatch: int = 1
+    seq_parallel: bool = False
+    rules: Optional[dict] = None       # sharding-rule overrides (perf iter)
+    kv_cache_dtype: Any = jnp.bfloat16
+    quantize_base: bool = False        # int8 frozen base (beyond paper)
+    cfg_updates: Optional[dict] = None  # dataclasses.replace overrides
+
+
+# default memory plans per (arch, shape); anything absent -> CellPlan()
+DEFAULT_PLANS: dict[tuple[str, str], CellPlan] = {
+    ("nemotron-4-340b", "train_4k"): CellPlan(microbatch=8,
+                                              seq_parallel=True),
+    ("qwen1.5-110b", "train_4k"): CellPlan(microbatch=8, seq_parallel=True),
+    ("llama4-maverick-400b-a17b", "train_4k"): CellPlan(microbatch=16,
+                                                        seq_parallel=True),
+    ("deepseek-v2-236b", "train_4k"): CellPlan(microbatch=16,
+                                               seq_parallel=True),
+    ("minitron-4b", "train_4k"): CellPlan(microbatch=4),
+    ("gemma3-4b", "train_4k"): CellPlan(microbatch=4),
+    ("paligemma-3b", "train_4k"): CellPlan(microbatch=4),
+    ("zamba2-2.7b", "train_4k"): CellPlan(microbatch=4),
+    ("mamba2-370m", "train_4k"): CellPlan(microbatch=4),
+    ("seamless-m4t-medium", "train_4k"): CellPlan(microbatch=8),
+    ("nemotron-4-340b", "prefill_32k"): CellPlan(seq_parallel=True),
+    ("qwen1.5-110b", "prefill_32k"): CellPlan(seq_parallel=True),
+}
+
+
+def plan_for(arch: str, shape: str) -> CellPlan:
+    return DEFAULT_PLANS.get((arch, shape), CellPlan())
+
+
+def make_constrain(mesh: Mesh, plan: CellPlan) -> Callable:
+    """Kind-dispatching sharding constraint (see utils.pcontext).
+
+    Every rule is best-effort: a dim that the target axis size does not
+    divide falls back to unsharded rather than erroring."""
+    batch_axes = tuple(a for a in ("pod", "data") if a in mesh.axis_names)
+    bsz = _size(mesh, batch_axes)
+    msz = _size(mesh, ("model",))
+    sp = plan.seq_parallel and "model" in mesh.axis_names
+
+    def _c(x, spec):
+        return jax.lax.with_sharding_constraint(x, NamedSharding(mesh, spec))
+
+    def div(n, size):
+        return size > 1 and n % size == 0
+
+    def constrain(x, kind: str = "residual"):
+        if kind == "residual" and x.ndim == 3:
+            if not div(x.shape[0], bsz):
+                return x
+            seq = "model" if (sp and div(x.shape[1], msz)) else None
+            return _c(x, P(batch_axes, seq, None))
+        if kind == "heads" and x.ndim == 4:
+            if not div(x.shape[0], bsz):
+                return x
+            hd = "model" if div(x.shape[2], msz) else None
+            return _c(x, P(batch_axes, None, hd, None))
+        if kind == "kv_chunks" and x.ndim == 5:
+            if not div(x.shape[1], bsz):
+                return x
+            hd = "model" if div(x.shape[3], msz) else None
+            return _c(x, P(None, batch_axes, None, hd, None))
+        if kind == "tokens" and x.ndim == 2:
+            # token rows shard over batch AND model axes (1M-token MoE
+            # dispatch buffers must not hold 16-way-only shards)
+            if div(x.shape[0], bsz * msz):
+                return _c(x, P(batch_axes + ("model",), None))
+            if div(x.shape[0], bsz):
+                return _c(x, P(batch_axes, None))
+            return x
+        if kind == "expert" and x.ndim == 3:
+            if not div(x.shape[0], msz):
+                return x
+            cap = "data" if div(x.shape[1], _size(mesh, ("data",))) \
+                else None
+            return _c(x, P("model", cap, None))
+        if kind == "cache4" and x.ndim == 4:
+            b = batch_axes if div(x.shape[0], bsz) else ()
+            seq = "model" if div(x.shape[1], msz) else None
+            if not b and seq is None:
+                return x
+            return _c(x, P(b or None, seq, None, None))
+        if kind == "cache3" and x.ndim == 3:
+            b = batch_axes if div(x.shape[0], bsz) else ()
+            seq = "model" if div(x.shape[1], msz) else None
+            if not b and seq is None:
+                return x
+            return _c(x, P(b or None, seq, None))
+        if kind == "cache_stack" and x.ndim >= 3:
+            # (layers, B, S, ...) preallocated prefill cache
+            b = batch_axes if div(x.shape[1], bsz) else ()
+            seq = "model" if div(x.shape[2], msz) else None
+            if not b and seq is None:
+                return x
+            rest = (None,) * (x.ndim - 3)
+            return _c(x, P(None, b or None, seq, *rest))
+        return x
+
+    return constrain
+
+
+def _size(mesh: Mesh, axes) -> int:
+    sizes = dict(zip(mesh.axis_names, mesh.devices.shape))
+    n = 1
+    for a in axes:
+        n *= sizes.get(a, 1)
+    return n
+
+
+def _batch_sharding(mesh: Mesh, spec_tree: Any) -> Any:
+    """Shard leading batch dim of every batch leaf over (pod, data);
+    leaves whose batch dim is indivisible stay replicated."""
+    batch_axes = tuple(a for a in ("pod", "data") if a in mesh.axis_names)
+    bsz = _size(mesh, batch_axes)
+
+    def one(x):
+        # microbatched leaves are (M, B, ...): shard dim 1, else dim 0
+        if x.ndim >= 2 and x.shape[0] < x.shape[1] and x.shape[1] % bsz == 0 \
+                and x.shape[0] <= 64:
+            return NamedSharding(mesh, P(None, batch_axes))
+        if x.shape[0] % bsz == 0:
+            return NamedSharding(mesh, P(batch_axes))
+        return NamedSharding(mesh, P())
+
+    return jax.tree.map(one, spec_tree)
+
+
+def _opt_shardings(mesh: Mesh, sh_train: Any) -> dict:
+    return {"mu": sh_train, "nu": sh_train,
+            "count": NamedSharding(mesh, P())}
+
+
+def build_cell(entry: ArchEntry, shape_name: str, mesh: Mesh,
+               plan: Optional[CellPlan] = None,
+               cfg_override: Any = None) -> dict:
+    """Returns dict(fn, args, in_shardings, out_shardings, donate)."""
+    plan = plan or plan_for(entry.arch_id, shape_name)
+    cfg = cfg_override or entry.full()
+    if plan.cfg_updates:
+        cfg = dataclasses.replace(cfg, **plan.cfg_updates)
+    rules = dict(DEFAULT_RULES)
+    if plan.rules:
+        rules.update(plan.rules)
+    step = SHAPES[shape_name]["step"]
+    mod = ED if entry.kind == "encdec" else LM
+    key = jax.random.PRNGKey(0)
+    shapes = jax.eval_shape(
+        lambda k: {g: t for g, t in mod.init(k, cfg).items()
+                   if g in ("frozen", "train")}, key)
+    logical = mod.logical(cfg)
+    if plan.quantize_base:
+        from repro.core.lora import quantize_frozen_tree, \
+            quantize_frozen_logical
+        shapes = {"frozen": jax.eval_shape(quantize_frozen_tree,
+                                           shapes["frozen"]),
+                  "train": shapes["train"]}
+        logical = {"frozen": quantize_frozen_logical(logical["frozen"]),
+                   "train": logical["train"]}
+    sh_frozen = tree_shardings(logical["frozen"], shapes["frozen"], mesh,
+                               rules)
+    sh_train = tree_shardings(logical["train"], shapes["train"], mesh,
+                              rules)
+    constrain = make_constrain(mesh, plan)
+    specs = input_specs(entry, cfg, shape_name)
+
+    if step == "train":
+        return _build_train(entry, cfg, mesh, plan, shapes, sh_frozen,
+                            sh_train, constrain, specs, mod)
+    if step == "prefill":
+        return _build_prefill(entry, cfg, mesh, plan, shapes, sh_frozen,
+                              sh_train, constrain, specs, mod)
+    return _build_decode(entry, cfg, mesh, plan, shapes, sh_frozen,
+                         sh_train, constrain, specs, mod, shape_name)
+
+
+# ---------------------------------------------------------------------------
+
+def _micro_reshape(specs: Any, m: int) -> Any:
+    def one(x):
+        assert x.shape[0] % m == 0, (x.shape, m)
+        return jax.ShapeDtypeStruct((m, x.shape[0] // m) + x.shape[1:],
+                                    x.dtype)
+    return jax.tree.map(one, specs)
+
+
+def _build_train(entry, cfg, mesh, plan, shapes, sh_frozen, sh_train,
+                 constrain, specs, mod):
+    opt = adamw(weight_decay=0.0)
+    opt_shapes = jax.eval_shape(opt.init, shapes["train"])
+    sh_opt = _opt_shardings(mesh, sh_train)
+    m = plan.microbatch
+    batch_specs = _micro_reshape(specs["batch"], m) if m > 1 \
+        else specs["batch"]
+    sh_batch = _batch_sharding(mesh, batch_specs)
+
+    loss_fn = mod.loss_fn
+
+    def train_step(frozen, train, opt_state, batch):
+        def one_micro(tr, mb):
+            with pcontext.use(constrain):
+                loss, metrics = loss_fn(frozen, tr, cfg, mb,
+                                        lambda x: constrain(x, "residual"))
+            return loss, metrics
+
+        if m == 1:
+            (loss, metrics), grads = jax.value_and_grad(
+                one_micro, has_aux=True)(train, batch)
+        else:
+            def acc_body(carry, mb):
+                gsum, lsum = carry
+                (l, _), g = jax.value_and_grad(one_micro, has_aux=True)(
+                    train, mb)
+                gsum = jax.tree.map(
+                    lambda a, b: a + b.astype(jnp.float32), gsum, g)
+                return (gsum, lsum + l), None
+
+            g0 = jax.tree.map(lambda x: jnp.zeros(x.shape, jnp.float32),
+                              train)
+            (grads, lsum), _ = jax.lax.scan(
+                acc_body, (g0, jnp.zeros((), jnp.float32)), batch)
+            grads = jax.tree.map(lambda g: g / m, grads)
+            loss = lsum / m
+        train, opt_state = opt.update(grads, opt_state, train, 3e-4)
+        return train, opt_state, {"loss": loss}
+
+    args = (shapes["frozen"], shapes["train"], opt_shapes, batch_specs)
+    in_sh = (sh_frozen, sh_train, sh_opt, sh_batch)
+    out_sh = (sh_train, sh_opt, None)
+    return {"fn": train_step, "args": args, "in_shardings": in_sh,
+            "out_shardings": out_sh, "donate": (1, 2), "cfg": cfg,
+            "plan": plan}
+
+
+def _build_prefill(entry, cfg, mesh, plan, shapes, sh_frozen, sh_train,
+                   constrain, specs, mod):
+    sh_batch = _batch_sharding(mesh, specs["batch"])
+
+    if entry.kind == "encdec":
+        def prefill_step(frozen, train, batch):
+            with pcontext.use(constrain):
+                memory = ED.encode(frozen, train, cfg, batch["src_embed"],
+                                   lambda x: constrain(x, "residual"))
+                cross = ED.cross_cache(frozen, train, cfg, memory)
+                cross = jax.tree.map(
+                    lambda c: constrain(c, "cache4") if c.ndim == 5 else c,
+                    cross)
+            return cross
+
+        args = (shapes["frozen"], shapes["train"], specs["batch"])
+    else:
+        def prefill_step(frozen, train, batch):
+            with pcontext.use(constrain):
+                logits, caches, pos = LM.prefill(
+                    frozen, train, cfg, batch["tokens"],
+                    batch.get("prefix_embed"),
+                    lambda x: constrain(x, "residual"))
+            return logits, caches, pos
+
+        args = (shapes["frozen"], shapes["train"], specs["batch"])
+    return {"fn": prefill_step, "args": args,
+            "in_shardings": (sh_frozen, sh_train, sh_batch),
+            "out_shardings": None, "donate": (), "cfg": cfg, "plan": plan}
+
+
+def _build_decode(entry, cfg, mesh, plan, shapes, sh_frozen, sh_train,
+                  constrain, specs, mod, shape_name):
+    rules = dict(DEFAULT_RULES)
+    rules["kv_seq"] = ("model", "data")    # split-KV decode (DESIGN.md §3)
+    if plan.rules:
+        rules.update(plan.rules)
+    sh_batch = _batch_sharding(mesh, specs["batch"])
+    pos_spec = jax.ShapeDtypeStruct((), jnp.int32)
+    pos_sh = NamedSharding(mesh, P())
+
+    if entry.kind == "encdec":
+        from repro.models import attention as A
+        log_one = jax.tree.map(
+            lambda t: ("layers",) + t, A.gqa_cache_logical(),
+            is_leaf=lambda t: isinstance(t, tuple) and all(
+                isinstance(e, (str, type(None))) for e in t))
+        sh_self = tree_shardings(log_one, specs["self_caches"], mesh, rules)
+        log_cross = {"k": ("layers", "batch", "kv_seq", None, None),
+                     "v": ("layers", "batch", "kv_seq", None, None)}
+        sh_cross = tree_shardings(log_cross, specs["cross_caches"], mesh,
+                                  rules)
+
+        def decode_step(frozen, train, batch, self_caches, cross_caches,
+                        pos):
+            with pcontext.use(constrain):
+                return ED.decode_step(frozen, train, cfg, batch["token"],
+                                      self_caches, cross_caches, pos)
+
+        args = (shapes["frozen"], shapes["train"], specs["batch"],
+                specs["self_caches"], specs["cross_caches"], pos_spec)
+        in_sh = (sh_frozen, sh_train, sh_batch, sh_self, sh_cross, pos_sh)
+        return {"fn": decode_step, "args": args, "in_shardings": in_sh,
+                "out_shardings": None, "donate": (3,), "cfg": cfg,
+                "plan": plan}
+
+    log_caches = LM.cache_logical(cfg)
+    sh_caches = tree_shardings(log_caches, specs["caches"], mesh, rules)
+
+    def decode_step(frozen, train, batch, caches, pos):
+        with pcontext.use(constrain):
+            return LM.decode_step(frozen, train, cfg, batch["token"],
+                                  caches, pos)
+
+    args = (shapes["frozen"], shapes["train"], specs["batch"],
+            specs["caches"], pos_spec)
+    in_sh = (sh_frozen, sh_train, sh_batch, sh_caches, pos_sh)
+    return {"fn": decode_step, "args": args, "in_shardings": in_sh,
+            "out_shardings": None, "donate": (3,), "cfg": cfg, "plan": plan}

@@ -1,0 +1,1 @@
+from repro.models import layers, attention, moe, ssm, lm, encdec, resnet

@@ -1,0 +1,360 @@
+"""Attention blocks: GQA (with sliding-window / prefix variants) and
+DeepSeek-style MLA. Projections are FLoCoRA mixed-mode linears.
+
+Head padding: when the true head count does not divide the tensor-model
+axis (e.g. minitron's 24 heads on a 16-way mesh), configs set
+``pad_heads_to`` — extra query heads have zero output projection, so the
+function is exact while every matmul stays evenly shardable. KV heads are
+never padded (GQA repeat covers them); KV caches shard their *sequence*
+axis instead (FlashDecoding-style split-KV across chips).
+
+Caches:
+  GQA full:  {'k','v': (B, Smax, Hkv, Dh), 'pos': ()}          (global)
+  GQA ring:  same shapes with Smax == window (ring buffer)     (local)
+  MLA:       {'ckv': (B, Smax, kv_lora), 'kr': (B, Smax, rope_dim),
+              'pos': ()} — latent cache + weight absorption at decode.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.lora import LoRAConfig, linear_init, linear_apply, \
+    linear_logical
+from repro.models import layers as L
+from repro.utils.pcontext import constrain as pconstrain
+
+Array = jax.Array
+
+
+# ---------------------------------------------------------------------------
+# GQA
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class GQASpec:
+    d_model: int
+    n_heads: int
+    n_kv_heads: int
+    head_dim: int
+    qkv_bias: bool = False
+    qk_norm: bool = False
+    pad_heads_to: Optional[int] = None   # padded query-head count
+
+    @property
+    def hq(self) -> int:
+        return self.pad_heads_to or self.n_heads
+
+    @property
+    def rep(self) -> int:
+        assert self.hq % self.n_kv_heads == 0
+        return self.hq // self.n_kv_heads
+
+
+def gqa_init(key: Array, spec: GQASpec, mode: str, lora: LoRAConfig,
+             stack: tuple[int, ...] = ()) -> tuple[dict, dict]:
+    ks = jax.random.split(key, 4)
+    d, hq, hkv, dh = spec.d_model, spec.hq, spec.n_kv_heads, spec.head_dim
+    fz, tr = {}, {}
+    for k_, nm, dout in ((ks[0], "wq", hq * dh), (ks[1], "wk", hkv * dh),
+                         (ks[2], "wv", hkv * dh), (ks[3], "wo", None)):
+        if nm == "wo":
+            f, t = linear_init(k_, hq * dh, d, mode, lora, stack)
+        else:
+            f, t = linear_init(k_, d, dout, mode, lora, stack)
+        if f:
+            fz[nm] = f
+        if t:
+            tr[nm] = t
+    if spec.pad_heads_to and spec.pad_heads_to > spec.n_heads:
+        # zero the padded heads' input to wo and output of wq so padding
+        # is exact: mask applied in apply() (cheaper than editing weights
+        # and keeps init distribution clean for real heads).
+        pass
+    if spec.qkv_bias:
+        tr["bq"] = jnp.zeros((*stack, hq * dh), jnp.float32)
+        tr["bk"] = jnp.zeros((*stack, hkv * dh), jnp.float32)
+        tr["bv"] = jnp.zeros((*stack, hkv * dh), jnp.float32)
+    if spec.qk_norm:
+        tr["q_norm"] = L.rmsnorm_init(dh, stack)
+        tr["k_norm"] = L.rmsnorm_init(dh, stack)
+    return fz, tr
+
+
+def gqa_logical(spec: GQASpec, mode: str, stack: bool) -> tuple[dict, dict]:
+    fz, tr = {}, {}
+    for nm, dims in (("wq", ("fsdp", "heads")), ("wk", ("fsdp", "kv_proj")),
+                     ("wv", ("fsdp", "kv_proj")), ("wo", ("heads", "fsdp"))):
+        f, t = linear_logical(*dims, mode, stack)
+        if f:
+            fz[nm] = f
+        if t:
+            tr[nm] = t
+    pre = ("layers",) if stack else ()
+    if spec.qkv_bias:
+        tr["bq"] = (*pre, "heads")
+        tr["bk"] = (*pre, "kv_proj")
+        tr["bv"] = (*pre, "kv_proj")
+    if spec.qk_norm:
+        tr["q_norm"] = {"scale": (*pre, None)}
+        tr["k_norm"] = {"scale": (*pre, None)}
+    return fz, tr
+
+
+def _head_mask(spec: GQASpec, dtype) -> Optional[Array]:
+    if not spec.pad_heads_to or spec.pad_heads_to == spec.n_heads:
+        return None
+    m = jnp.zeros((spec.hq,), dtype).at[: spec.n_heads].set(1.0)
+    return m[None, None, :, None]
+
+
+def _qkv(fz, tr, spec: GQASpec, x: Array, lora_scale: float, rope):
+    b, s, _ = x.shape
+    dh = spec.head_dim
+    q = linear_apply(fz.get("wq", {}), tr.get("wq", {}), x, lora_scale)
+    k = linear_apply(fz.get("wk", {}), tr.get("wk", {}), x, lora_scale)
+    v = linear_apply(fz.get("wv", {}), tr.get("wv", {}), x, lora_scale)
+    if spec.qkv_bias:
+        q = q + tr["bq"].astype(q.dtype)
+        k = k + tr["bk"].astype(k.dtype)
+        v = v + tr["bv"].astype(v.dtype)
+    q = q.reshape(b, s, spec.hq, dh)
+    k = k.reshape(b, s, spec.n_kv_heads, dh)
+    v = v.reshape(b, s, spec.n_kv_heads, dh)
+    if spec.qk_norm:
+        q = L.rmsnorm_apply(tr["q_norm"], q)
+        k = L.rmsnorm_apply(tr["k_norm"], k)
+    if rope is not None:
+        cos, sin = rope
+        q = L.apply_rope(q, cos, sin)
+        k = L.apply_rope(k, cos, sin)
+    hm = _head_mask(spec, q.dtype)
+    if hm is not None:
+        q = q * hm
+    return q, k, v
+
+
+def gqa_apply(fz: dict, tr: dict, spec: GQASpec, x: Array,
+              lora_scale: float, rope, *,
+              window: Optional[int] = None,
+              causal: bool = True,
+              prefix_len: Optional[Array] = None,
+              kv_chunk: int = 1024) -> Array:
+    """Training / prefill forward. Returns (B, S, d)."""
+    b, s, _ = x.shape
+    q, k, v = _qkv(fz, tr, spec, x, lora_scale, rope)
+    if window is not None and window < s:
+        o = L.local_attention_blocked(q, k, v, window=window)
+    else:
+        o = L.attention_chunked(q, k, v, causal=causal,
+                                prefix_len=prefix_len, kv_chunk=kv_chunk)
+    hm = _head_mask(spec, o.dtype)
+    if hm is not None:
+        o = o * hm
+    o = o.reshape(b, s, spec.hq * spec.head_dim)
+    return linear_apply(fz.get("wo", {}), tr.get("wo", {}), o, lora_scale)
+
+
+def gqa_cache_init(spec: GQASpec, batch: int, max_seq: int,
+                   window: Optional[int] = None,
+                   dtype=jnp.bfloat16) -> dict:
+    smax = min(window, max_seq) if window else max_seq
+    shp = (batch, smax, spec.n_kv_heads, spec.head_dim)
+    return {"k": jnp.zeros(shp, dtype), "v": jnp.zeros(shp, dtype)}
+
+
+def gqa_cache_logical() -> dict:
+    return {"k": ("batch", "kv_seq", None, None),
+            "v": ("batch", "kv_seq", None, None)}
+
+
+def gqa_decode(fz: dict, tr: dict, spec: GQASpec, x: Array, cache: dict,
+               pos: Array, lora_scale: float, rope, *,
+               window: Optional[int] = None) -> tuple[Array, dict]:
+    """x: (B, 1, d); pos: () current absolute position. Returns (y, cache')."""
+    b = x.shape[0]
+    q, k, v = _qkv(fz, tr, spec, x, lora_scale, rope)
+    smax = cache["k"].shape[1]
+    slot = (pos % smax) if window else pos
+    kc = pconstrain(jax.lax.dynamic_update_slice_in_dim(
+        cache["k"], k.astype(cache["k"].dtype), slot, axis=1), "cache4")
+    vc = pconstrain(jax.lax.dynamic_update_slice_in_dim(
+        cache["v"], v.astype(cache["v"].dtype), slot, axis=1), "cache4")
+    length = jnp.minimum(pos + 1, smax)
+    o = L.decode_attention(q, kc, vc, length)
+    hm = _head_mask(spec, o.dtype)
+    if hm is not None:
+        o = o * hm
+    o = o.reshape(b, 1, spec.hq * spec.head_dim)
+    y = linear_apply(fz.get("wo", {}), tr.get("wo", {}), o, lora_scale)
+    return y, {"k": kc, "v": vc}
+
+
+# ---------------------------------------------------------------------------
+# MLA (DeepSeek-V2)
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class MLASpec:
+    d_model: int
+    n_heads: int
+    q_lora_rank: int = 1536
+    kv_lora_rank: int = 512
+    qk_nope_dim: int = 128
+    qk_rope_dim: int = 64
+    v_head_dim: int = 128
+
+    @property
+    def qk_dim(self) -> int:
+        return self.qk_nope_dim + self.qk_rope_dim
+
+
+def mla_init(key: Array, spec: MLASpec, mode: str, lora: LoRAConfig,
+             stack: tuple[int, ...] = ()) -> tuple[dict, dict]:
+    ks = jax.random.split(key, 6)
+    h = spec.n_heads
+    parts = {
+        "q_a": (spec.d_model, spec.q_lora_rank),
+        "q_b": (spec.q_lora_rank, h * spec.qk_dim),
+        "kv_a": (spec.d_model, spec.kv_lora_rank + spec.qk_rope_dim),
+        "k_b": (spec.kv_lora_rank, h * spec.qk_nope_dim),
+        "v_b": (spec.kv_lora_rank, h * spec.v_head_dim),
+        "wo": (h * spec.v_head_dim, spec.d_model),
+    }
+    fz, tr = {}, {}
+    for k_, (nm, dims) in zip(ks, parts.items()):
+        f, t = linear_init(k_, *dims, mode, lora, stack)
+        if f:
+            fz[nm] = f
+        if t:
+            tr[nm] = t
+    tr["q_a_norm"] = L.rmsnorm_init(spec.q_lora_rank, stack)
+    tr["kv_a_norm"] = L.rmsnorm_init(spec.kv_lora_rank, stack)
+    return fz, tr
+
+
+def mla_logical(spec: MLASpec, mode: str, stack: bool) -> tuple[dict, dict]:
+    dims = {"q_a": ("fsdp", "kv_lora"), "q_b": ("kv_lora", "heads"),
+            "kv_a": ("fsdp", "kv_lora"), "k_b": ("kv_lora", "heads"),
+            "v_b": ("kv_lora", "heads"), "wo": ("heads", "fsdp")}
+    fz, tr = {}, {}
+    for nm, d in dims.items():
+        f, t = linear_logical(*d, mode, stack)
+        if f:
+            fz[nm] = f
+        if t:
+            tr[nm] = t
+    pre = ("layers",) if stack else ()
+    tr["q_a_norm"] = {"scale": (*pre, None)}
+    tr["kv_a_norm"] = {"scale": (*pre, None)}
+    return fz, tr
+
+
+def _mla_q(fz, tr, spec, x, lora_scale, rope):
+    b, s, _ = x.shape
+    h = spec.n_heads
+    qa = linear_apply(fz.get("q_a", {}), tr.get("q_a", {}), x, lora_scale)
+    qa = L.rmsnorm_apply(tr["q_a_norm"], qa)
+    q = linear_apply(fz.get("q_b", {}), tr.get("q_b", {}), qa, lora_scale)
+    q = q.reshape(b, s, h, spec.qk_dim)
+    q_nope = q[..., : spec.qk_nope_dim]
+    q_rope = L.apply_rope(q[..., spec.qk_nope_dim:], *rope)
+    return q_nope, q_rope
+
+
+def _mla_latent(fz, tr, spec, x, lora_scale, rope):
+    kv = linear_apply(fz.get("kv_a", {}), tr.get("kv_a", {}), x, lora_scale)
+    ckv = L.rmsnorm_apply(tr["kv_a_norm"], kv[..., : spec.kv_lora_rank])
+    kr = kv[..., spec.kv_lora_rank:][:, :, None, :]      # single shared head
+    kr = L.apply_rope(kr, *rope)[:, :, 0]
+    return ckv, kr
+
+
+def mla_apply(fz: dict, tr: dict, spec: MLASpec, x: Array,
+              lora_scale: float, rope, *, kv_chunk: int = 1024) -> Array:
+    """Training / prefill: materialize per-head K,V from the latent."""
+    b, s, _ = x.shape
+    h = spec.n_heads
+    q_nope, q_rope = _mla_q(fz, tr, spec, x, lora_scale, rope)
+    ckv, kr = _mla_latent(fz, tr, spec, x, lora_scale, rope)
+    k_nope = linear_apply(fz.get("k_b", {}), tr.get("k_b", {}), ckv,
+                          lora_scale).reshape(b, s, h, spec.qk_nope_dim)
+    v = linear_apply(fz.get("v_b", {}), tr.get("v_b", {}), ckv,
+                     lora_scale).reshape(b, s, h, spec.v_head_dim)
+    q = jnp.concatenate([q_nope, q_rope], axis=-1)
+    k = jnp.concatenate(
+        [k_nope, jnp.broadcast_to(kr[:, :, None], (b, s, h, spec.qk_rope_dim))],
+        axis=-1)
+    o = L.attention_chunked(q, k, v, causal=True, kv_chunk=kv_chunk,
+                            scale=spec.qk_dim ** -0.5)
+    o = o.reshape(b, s, h * spec.v_head_dim)
+    return linear_apply(fz.get("wo", {}), tr.get("wo", {}), o, lora_scale)
+
+
+def mla_cache_init(spec: MLASpec, batch: int, max_seq: int,
+                   dtype=jnp.bfloat16) -> dict:
+    return {"ckv": jnp.zeros((batch, max_seq, spec.kv_lora_rank), dtype),
+            "kr": jnp.zeros((batch, max_seq, spec.qk_rope_dim), dtype)}
+
+
+def mla_cache_logical() -> dict:
+    return {"ckv": ("batch", "kv_seq", None),
+            "kr": ("batch", "kv_seq", None)}
+
+
+def mla_decode(fz: dict, tr: dict, spec: MLASpec, x: Array, cache: dict,
+               pos: Array, lora_scale: float, rope) -> tuple[Array, dict]:
+    """Latent-cache decode with weight absorption (O(S·kv_lora) per head)."""
+    b = x.shape[0]
+    h = spec.n_heads
+    q_nope, q_rope = _mla_q(fz, tr, spec, x, lora_scale, rope)
+    ckv_new, kr_new = _mla_latent(fz, tr, spec, x, lora_scale, rope)
+    ckv = pconstrain(jax.lax.dynamic_update_slice_in_dim(
+        cache["ckv"], ckv_new.astype(cache["ckv"].dtype), pos, axis=1),
+        "cache3")
+    kr = pconstrain(jax.lax.dynamic_update_slice_in_dim(
+        cache["kr"], kr_new.astype(cache["kr"].dtype), pos, axis=1),
+        "cache3")
+    # absorb k_b into q:  q_abs[b,h,c] = sum_d q_nope[b,h,d] * k_b[c,(h d)]
+    k_b = _eff_weight(fz.get("k_b", {}), tr.get("k_b", {}), lora_scale)
+    v_b = _eff_weight(fz.get("v_b", {}), tr.get("v_b", {}), lora_scale)
+    k_b = k_b.reshape(spec.kv_lora_rank, h, spec.qk_nope_dim)
+    v_b = v_b.reshape(spec.kv_lora_rank, h, spec.v_head_dim)
+    q_abs = jnp.einsum("bhd,chd->bhc", q_nope[:, 0].astype(jnp.float32),
+                       k_b.astype(jnp.float32))
+    sc = spec.qk_dim ** -0.5
+    s_lat = jnp.einsum("bhc,bsc->bhs", q_abs.astype(jnp.bfloat16),
+                       ckv.astype(jnp.bfloat16),
+                       preferred_element_type=jnp.float32)
+    s_rope = jnp.einsum("bhr,bsr->bhs", q_rope[:, 0].astype(jnp.bfloat16),
+                        kr.astype(jnp.bfloat16),
+                        preferred_element_type=jnp.float32)
+    scores = (s_lat + s_rope) * sc
+    smax = cache["ckv"].shape[1]
+    mask = jnp.arange(smax)[None, None, :] <= pos
+    scores = jnp.where(mask, scores, -jnp.inf)
+    p = jax.nn.softmax(scores, axis=-1)
+    ctx = jnp.einsum("bhs,bsc->bhc", p.astype(jnp.bfloat16),
+                     ckv.astype(jnp.bfloat16),
+                     preferred_element_type=jnp.float32)
+    o = jnp.einsum("bhc,chd->bhd", ctx, v_b.astype(jnp.float32))
+    o = o.reshape(b, 1, h * spec.v_head_dim).astype(x.dtype)
+    y = linear_apply(fz.get("wo", {}), tr.get("wo", {}), o, lora_scale)
+    return y, {"ckv": ckv, "kr": kr}
+
+
+def _eff_weight(fz: dict, tr: dict, lora_scale: float) -> Array:
+    """Effective (merged) weight of a mixed-mode linear — used where
+    absorption needs the matrix itself rather than its action."""
+    if "w" in tr:
+        w = tr["w"]
+    else:
+        from repro.core.lora import frozen_weight
+        w = frozen_weight(fz)
+    if "a" in tr:
+        w = w.astype(jnp.float32) + lora_scale * (
+            tr["a"].astype(jnp.float32) @ tr["b"].astype(jnp.float32))
+    return w

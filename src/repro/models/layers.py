@@ -1,0 +1,367 @@
+"""Shared neural-net layers for the model zoo (functional, pytree params).
+
+Conventions:
+  * activations: (batch, seq, d_model) NSD; attention heads (B, S, H, Dh);
+  * weights for linears: (d_in, d_out) — output channel is the LAST axis
+    (matches the message codec's per-channel quantization rule);
+  * every linear is a mixed-mode FLoCoRA linear: (frozen, trainable) dicts
+    via repro.core.lora.linear_init/apply;
+  * attention never materializes (Sq, Skv) for long sequences: causal/
+    bidir/prefix paths use an online-softmax scan over KV chunks; sliding
+    window uses exact blocked local attention (band of 2W per query block).
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.lora import LoRAConfig, linear_init, linear_apply, \
+    linear_logical
+from repro.utils.pcontext import constrain as pconstrain
+
+Array = jax.Array
+
+# ---------------------------------------------------------------------------
+# Norms
+# ---------------------------------------------------------------------------
+
+def rmsnorm_init(d: int, stack: tuple[int, ...] = ()) -> dict:
+    return {"scale": jnp.ones((*stack, d), jnp.float32)}
+
+
+def rmsnorm_apply(p: dict, x: Array, eps: float = 1e-6) -> Array:
+    xf = x.astype(jnp.float32)
+    var = jnp.mean(xf * xf, axis=-1, keepdims=True)
+    y = xf * jax.lax.rsqrt(var + eps) * p["scale"]
+    return y.astype(x.dtype)
+
+
+def groupnorm_init(c: int) -> dict:
+    return {"scale": jnp.ones((c,), jnp.float32),
+            "bias": jnp.zeros((c,), jnp.float32)}
+
+
+def groupnorm_apply(p: dict, x: Array, groups: int = 32,
+                    eps: float = 1e-5) -> Array:
+    """x: (N, H, W, C). GroupNorm over (H, W, C//G)."""
+    n, h, w, c = x.shape
+    g = min(groups, c)
+    xf = x.astype(jnp.float32).reshape(n, h, w, g, c // g)
+    mean = jnp.mean(xf, axis=(1, 2, 4), keepdims=True)
+    var = jnp.var(xf, axis=(1, 2, 4), keepdims=True)
+    xf = (xf - mean) * jax.lax.rsqrt(var + eps)
+    xf = xf.reshape(n, h, w, c)
+    return (xf * p["scale"] + p["bias"]).astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# Rotary embeddings
+# ---------------------------------------------------------------------------
+
+def rope_for_positions(positions: Array, dim: int, base: float = 10000.0
+                       ) -> tuple[Array, Array]:
+    """cos/sin for given integer positions ((S,) or (B, S)) — computed
+    directly (never materializes a max-length table; a 500k-decode step
+    only ever computes one position). Returns (..., dim//2) fp32."""
+    inv = 1.0 / (base ** (jnp.arange(0, dim, 2, dtype=jnp.float32) / dim))
+    freqs = positions.astype(jnp.float32)[..., None] * inv
+    return jnp.cos(freqs), jnp.sin(freqs)
+
+
+def apply_rope(x: Array, cos: Array, sin: Array) -> Array:
+    """x: (B, S, H, Dh); cos/sin: (S, Dh//2) or (B, S, Dh//2)."""
+    if cos.ndim == 2:
+        c, si = cos[None, :, None, :], sin[None, :, None, :]
+    else:
+        c, si = cos[:, :, None, :], sin[:, :, None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * c - x2 * si, x2 * c + x1 * si], axis=-1)
+    return out.astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# Attention cores (no projections — those live in the block)
+# ---------------------------------------------------------------------------
+
+def _repeat_kv(k: Array, n_rep: int) -> Array:
+    """(B, S, Hkv, D) -> (B, S, Hkv*n_rep, D)."""
+    if n_rep == 1:
+        return k
+    b, s, h, d = k.shape
+    return jnp.broadcast_to(k[:, :, :, None, :], (b, s, h, n_rep, d)
+                            ).reshape(b, s, h * n_rep, d)
+
+
+def attention_chunked(q: Array, k: Array, v: Array, *,
+                      causal: bool = True,
+                      prefix_len: Optional[Array] = None,
+                      kv_chunk: int = 1024,
+                      q_offset: int = 0,
+                      scale: Optional[float] = None) -> Array:
+    """Online-softmax attention, scanning KV in chunks (flash-style in
+    pure JAX — the memory high-water is (B, H, Sq, kv_chunk)).
+
+    q: (B, Sq, H, D); k, v: (B, Skv, Hkv, D) with H % Hkv == 0.
+    prefix_len: (B,) — bidirectional attention within [0, prefix_len)
+    (PaliGemma-style prefix-LM); combined with causal elsewhere.
+    q_offset: absolute position of q[0] (prefill continuation / decode).
+    """
+    b, sq, h, d = q.shape
+    skv, hkv = k.shape[1], k.shape[2]
+    dv = v.shape[-1]                     # may differ from d (MLA)
+    k = _repeat_kv(k, h // hkv)
+    v = _repeat_kv(v, h // hkv)
+    q = pconstrain(q, "heads")
+    k = pconstrain(k, "heads")
+    v = pconstrain(v, "heads")
+    sc = scale if scale is not None else d ** -0.5
+    qf = (q * sc).astype(jnp.bfloat16)
+
+    n_chunks = -(-skv // kv_chunk)
+    pad = n_chunks * kv_chunk - skv
+    if pad:
+        k = jnp.pad(k, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, pad), (0, 0), (0, 0)))
+    kc = pconstrain(
+        k.reshape(b, n_chunks, kv_chunk, h, d).transpose(1, 0, 2, 3, 4),
+        "kv_chunks")
+    vc = pconstrain(
+        v.reshape(b, n_chunks, kv_chunk, h, dv).transpose(1, 0, 2, 3, 4),
+        "kv_chunks")
+
+    q_pos = q_offset + jnp.arange(sq)
+
+    def body(carry, xs):
+        m, l, acc = carry
+        kch, vch, cidx = xs
+        kv_pos = cidx * kv_chunk + jnp.arange(kv_chunk)
+        # scores: (B, H, Sq, C)
+        s_ = jnp.einsum("bqhd,bchd->bhqc", qf, kch.astype(jnp.bfloat16),
+                        preferred_element_type=jnp.float32)
+        valid = (kv_pos < skv)[None, :]
+        if causal:
+            ok = q_pos[:, None] >= kv_pos[None, :]
+            if prefix_len is not None:
+                both_prefix = (q_pos[None, :, None] < prefix_len[:, None, None]) \
+                    & (kv_pos[None, None, :] < prefix_len[:, None, None])
+                ok = ok[None] | both_prefix
+                mask = ok & valid
+                s_ = jnp.where(mask[:, None], s_, -jnp.inf)
+            else:
+                mask = ok & valid
+                s_ = jnp.where(mask[None, None], s_, -jnp.inf)
+        else:
+            s_ = jnp.where(valid[None, None], s_, -jnp.inf)
+        m_new = jnp.maximum(m, jnp.max(s_, axis=-1))
+        # guard fully-masked rows (m_new == -inf)
+        m_safe = jnp.where(jnp.isfinite(m_new), m_new, 0.0)
+        p = jnp.exp(s_ - m_safe[..., None])
+        p = jnp.where(jnp.isfinite(s_), p, 0.0)
+        corr = jnp.where(jnp.isfinite(m), jnp.exp(m - m_safe), 0.0)
+        l_new = l * corr + jnp.sum(p, axis=-1)
+        acc_new = acc * corr[..., None] + jnp.einsum(
+            "bhqc,bchd->bhqd", p.astype(jnp.bfloat16),
+            vch.astype(jnp.bfloat16), preferred_element_type=jnp.float32)
+        return (m_new, l_new, acc_new), None
+
+    m0 = jnp.full((b, h, sq), -jnp.inf, jnp.float32)
+    l0 = jnp.zeros((b, h, sq), jnp.float32)
+    a0 = jnp.zeros((b, h, sq, dv), jnp.float32)
+    body = jax.checkpoint(body,
+                          policy=jax.checkpoint_policies.nothing_saveable)
+    (m, l, acc), _ = jax.lax.scan(
+        body, (m0, l0, a0),
+        (kc, vc, jnp.arange(n_chunks)))
+    out = acc / jnp.maximum(l, 1e-20)[..., None]
+    return out.transpose(0, 2, 1, 3).astype(q.dtype)   # (B, Sq, H, D)
+
+
+def local_attention_blocked(q: Array, k: Array, v: Array, *,
+                            window: int,
+                            scale: Optional[float] = None) -> Array:
+    """Exact causal sliding-window attention (window W), O(S·2W).
+
+    Each query block of length W attends to its own and the previous
+    block — covers every key within the causal window [pos-W+1, pos].
+    q: (B, S, H, D); k, v: (B, S, Hkv, D). S % W need not hold (padded).
+    """
+    b, s, h, d = q.shape
+    hkv = k.shape[2]
+    k = _repeat_kv(k, h // hkv)
+    v = _repeat_kv(v, h // hkv)
+    sc = scale if scale is not None else d ** -0.5
+    w = window
+    nb = -(-s // w)
+    pad = nb * w - s
+    if pad:
+        q = jnp.pad(q, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        k = jnp.pad(k, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, pad), (0, 0), (0, 0)))
+    q = pconstrain(q, "heads")
+    k = pconstrain(k, "heads")
+    v = pconstrain(v, "heads")
+    qb = q.reshape(b, nb, w, h, d)
+    kb = k.reshape(b, nb, w, h, d)
+    vb = v.reshape(b, nb, w, h, d)
+    # band of [previous block, current block]: (B, nb, 2W, H, D)
+    kprev = jnp.concatenate([jnp.zeros_like(kb[:, :1]), kb[:, :-1]], axis=1)
+    vprev = jnp.concatenate([jnp.zeros_like(vb[:, :1]), vb[:, :-1]], axis=1)
+    kband = jnp.concatenate([kprev, kb], axis=2)
+    vband = jnp.concatenate([vprev, vb], axis=2)
+
+    s_ = jnp.einsum("bnqhd,bnkhd->bnhqk",
+                    (qb * sc).astype(jnp.bfloat16), kband.astype(jnp.bfloat16),
+                    preferred_element_type=jnp.float32)
+    qpos = jnp.arange(w)[:, None]            # within-block query pos
+    kpos = jnp.arange(2 * w)[None, :] - w    # band pos relative to block start
+    ok = (kpos <= qpos) & (kpos > qpos - w)  # causal & within window
+    blk = jnp.arange(nb)
+    first = (blk == 0)[None, :, None, None, None]
+    pad_keys = (kpos < 0)[None, None, None]
+    ok = ok[None, None, None] & ~(first & pad_keys)
+    s_ = jnp.where(ok, s_, -jnp.inf)
+    p = jax.nn.softmax(s_, axis=-1)
+    o = jnp.einsum("bnhqk,bnkhd->bnqhd", p.astype(jnp.bfloat16),
+                   vband.astype(jnp.bfloat16),
+                   preferred_element_type=jnp.float32)
+    o = o.reshape(b, nb * w, h, d)[:, :s]
+    return o.astype(q.dtype)
+
+
+def decode_attention(q: Array, k_cache: Array, v_cache: Array,
+                     length: Array, *,
+                     scale: Optional[float] = None) -> Array:
+    """Single-token decode over a (possibly seq-sharded) KV cache.
+
+    q: (B, 1, H, D); caches: (B, Smax, Hkv, D); length: () or (B,) —
+    number of valid cache entries (the new token is already written).
+    """
+    b, _, h, d = q.shape
+    smax, hkv = k_cache.shape[1], k_cache.shape[2]
+    rep = h // hkv
+    sc = scale if scale is not None else d ** -0.5
+    qh = (q[:, 0] * sc).reshape(b, hkv, rep, d)
+    s_ = jnp.einsum("bgrd,bsgd->bgrs", qh.astype(jnp.bfloat16),
+                    k_cache.astype(jnp.bfloat16),
+                    preferred_element_type=jnp.float32)
+    pos = jnp.arange(smax)
+    ln = jnp.broadcast_to(jnp.asarray(length), (b,))
+    mask = pos[None, :] < ln[:, None]
+    s_ = jnp.where(mask[:, None, None, :], s_, -jnp.inf)
+    p = jax.nn.softmax(s_, axis=-1)
+    o = jnp.einsum("bgrs,bsgd->bgrd", p.astype(jnp.bfloat16),
+                   v_cache.astype(jnp.bfloat16),
+                   preferred_element_type=jnp.float32)
+    return o.reshape(b, 1, h, d).astype(q.dtype)
+
+
+# ---------------------------------------------------------------------------
+# MLPs
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class MLPSpec:
+    kind: str          # 'swiglu' | 'sqrelu' | 'gelu'
+    d_model: int
+    d_ff: int
+
+
+def mlp_init(key: Array, spec: MLPSpec, mode: str, lora: LoRAConfig,
+             stack: tuple[int, ...] = ()) -> tuple[dict, dict]:
+    ks = jax.random.split(key, 3)
+    fz, tr = {}, {}
+    names = ["wi", "wg", "wo"] if spec.kind in ("swiglu", "geglu") \
+        else ["wi", "wo"]
+    dims = {"wi": (spec.d_model, spec.d_ff), "wg": (spec.d_model, spec.d_ff),
+            "wo": (spec.d_ff, spec.d_model)}
+    for i, nm in enumerate(names):
+        f, t = linear_init(ks[i], *dims[nm], mode, lora, stack)
+        if f:
+            fz[nm] = f
+        if t:
+            tr[nm] = t
+    return fz, tr
+
+
+def mlp_logical(spec: MLPSpec, mode: str, stack: bool) -> tuple[dict, dict]:
+    fz, tr = {}, {}
+    names = ["wi", "wg", "wo"] if spec.kind in ("swiglu", "geglu") \
+        else ["wi", "wo"]
+    dims = {"wi": ("fsdp", "mlp"), "wg": ("fsdp", "mlp"),
+            "wo": ("mlp", "fsdp")}
+    for nm in names:
+        f, t = linear_logical(*dims[nm], mode, stack)
+        if f:
+            fz[nm] = f
+        if t:
+            tr[nm] = t
+    return fz, tr
+
+
+def mlp_apply(fz: dict, tr: dict, spec: MLPSpec, x: Array,
+              lora_scale: float) -> Array:
+    g = lambda nm, xx: linear_apply(fz.get(nm, {}), tr.get(nm, {}), xx,
+                                    lora_scale)
+    if spec.kind == "swiglu":
+        h = jax.nn.silu(g("wg", x).astype(jnp.float32)).astype(x.dtype) \
+            * g("wi", x)
+    elif spec.kind == "geglu":
+        h = jax.nn.gelu(g("wg", x).astype(jnp.float32),
+                        approximate=True).astype(x.dtype) * g("wi", x)
+    elif spec.kind == "sqrelu":
+        h = jax.nn.relu(g("wi", x))
+        h = (h * h)
+    elif spec.kind == "gelu":
+        h = jax.nn.gelu(g("wi", x).astype(jnp.float32)).astype(x.dtype)
+    else:
+        raise ValueError(spec.kind)
+    return g("wo", h)
+
+
+# ---------------------------------------------------------------------------
+# Chunked softmax cross-entropy (never materializes (B, S, V))
+# ---------------------------------------------------------------------------
+
+def chunked_xent(x: Array, head_fz: dict, head_tr: dict, labels: Array,
+                 lora_scale: float, chunk: int = 512,
+                 mask: Optional[Array] = None) -> Array:
+    """Mean next-token cross entropy. x: (B, S, d); labels: (B, S).
+
+    Scans over sequence chunks; per chunk computes logits (B, c, V),
+    logsumexp and the label logit, then discards the logits. This keeps
+    live memory at (B, chunk, V) instead of (B, S, V)."""
+    b, s, d = x.shape
+    n = -(-s // chunk)
+    pad = n * chunk - s
+    if pad:
+        x = jnp.pad(x, ((0, 0), (0, pad), (0, 0)))
+        labels = jnp.pad(labels, ((0, 0), (0, pad)))
+        if mask is not None:
+            mask = jnp.pad(mask, ((0, 0), (0, pad)))
+    if mask is None:
+        mask = jnp.ones((b, n * chunk), bool) if not pad else \
+            jnp.pad(jnp.ones((b, s), bool), ((0, 0), (0, pad)))
+    xc = x.reshape(b, n, chunk, d).transpose(1, 0, 2, 3)
+    lc = labels.reshape(b, n, chunk).transpose(1, 0, 2)
+    mc = mask.reshape(b, n, chunk).transpose(1, 0, 2)
+
+    def body(carry, xs):
+        tot, cnt = carry
+        xch, lch, mch = xs
+        logits = linear_apply(head_fz, head_tr, xch, lora_scale,
+                              compute_dtype=jnp.bfloat16).astype(jnp.float32)
+        lse = jax.nn.logsumexp(logits, axis=-1)
+        lab = jnp.take_along_axis(logits, lch[..., None], axis=-1)[..., 0]
+        nll = (lse - lab) * mch
+        return (tot + jnp.sum(nll), cnt + jnp.sum(mch)), None
+
+    body = jax.checkpoint(body,
+                          policy=jax.checkpoint_policies.nothing_saveable)
+    (tot, cnt), _ = jax.lax.scan(
+        body, (jnp.zeros((), jnp.float32), jnp.zeros((), jnp.float32)),
+        (xc, lc, mc))
+    return tot / jnp.maximum(cnt, 1.0)

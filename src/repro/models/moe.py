@@ -1,0 +1,213 @@
+"""Mixture-of-Experts layer with sort-based static-capacity dispatch.
+
+TPU adaptation (DESIGN.md §3): instead of a GPU block-sparse grouped GEMM
+(MegaBlocks) or a GShard (T, E, C) one-hot dispatch einsum, tokens are
+argsorted by expert id and scattered into a static (E, C+1, d) buffer
+(row C is the drop slot), giving one batched GEMM per weight — static
+shapes, MXU-friendly, and the expert axis shards over the `model` mesh
+axis (EP). Capacity C = ceil(T·k/E · capacity_factor) rounded to 8.
+
+Experts are FLoCoRA targets: frozen (E, d, f) banks + stacked per-expert
+LoRA adapters (E, d, r)/(E, r, f). The router and shared experts follow
+the usual rules (router trained dense — small and sensitive).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.lora import LoRAConfig, linear_init, linear_apply, \
+    linear_logical
+from repro.models.layers import MLPSpec, mlp_init, mlp_apply, mlp_logical
+from repro.utils.pcontext import constrain as pconstrain
+
+Array = jax.Array
+
+
+@dataclasses.dataclass(frozen=True)
+class MoESpec:
+    d_model: int
+    d_ff: int                 # per-expert hidden
+    n_experts: int
+    top_k: int
+    n_shared: int = 0         # shared experts (fused into one wide MLP)
+    capacity_factor: float = 1.25
+    mlp_kind: str = "swiglu"
+    # dispatch token-chunking: bounds the (E, C, d) buffer and the
+    # gather/scatter transients that GSPMD replicates for cross-shard
+    # scatters — a 1M-token prefill dispatches in ~64k-token chunks.
+    max_chunk_tokens: int = 65536
+
+
+def _cap(spec: MoESpec, tokens: int) -> int:
+    c = int(tokens * spec.top_k * spec.capacity_factor / spec.n_experts) + 1
+    return max(8, -(-c // 8) * 8)
+
+
+def moe_init(key: Array, spec: MoESpec, mode: str, lora: LoRAConfig,
+             stack: tuple[int, ...] = ()) -> tuple[dict, dict]:
+    ks = jax.random.split(key, 5)
+    e = spec.n_experts
+    fz, tr = {}, {}
+    # router: trained dense (small, sensitive)
+    tr["router"] = {"w": (jax.random.normal(
+        ks[0], (*stack, spec.d_model, e), jnp.float32)
+        * (spec.d_model ** -0.5))}
+    names = ["wi", "wg", "wo"] if spec.mlp_kind in ("swiglu", "geglu") \
+        else ["wi", "wo"]
+    dims = {"wi": (spec.d_model, spec.d_ff), "wg": (spec.d_model, spec.d_ff),
+            "wo": (spec.d_ff, spec.d_model)}
+    for i, nm in enumerate(names):
+        f, t = linear_init(ks[1 + i], *dims[nm], mode, lora,
+                           stack=(*stack, e))
+        if f:
+            fz[nm] = f
+        if t:
+            tr[nm] = t
+    if spec.n_shared:
+        sh = MLPSpec(spec.mlp_kind, spec.d_model,
+                     spec.d_ff * spec.n_shared)
+        sfz, str_ = mlp_init(ks[4], sh, mode, lora, stack)
+        if sfz:
+            fz["shared"] = sfz
+        if str_:
+            tr["shared"] = str_
+    return fz, tr
+
+
+def moe_logical(spec: MoESpec, mode: str, stack: bool) -> tuple[dict, dict]:
+    pre = ("layers",) if stack else ()
+    fz, tr = {}, {}
+    tr["router"] = {"w": (*pre, "fsdp", None)}
+    names = ["wi", "wg", "wo"] if spec.mlp_kind in ("swiglu", "geglu") \
+        else ["wi", "wo"]
+    dims = {"wi": ("fsdp", "mlp_nosplit"), "wg": ("fsdp", "mlp_nosplit"),
+            "wo": ("mlp_nosplit", "fsdp")}
+    for nm in names:
+        f, t = linear_logical(*dims[nm], mode, stack)
+        # inject the expert axis after the optional layer-stack axis
+        ins = (lambda tup: tup[: len(pre)] + ("expert",) + tup[len(pre):])
+        if f:
+            fz[nm] = {k: ins(v) for k, v in f.items()}
+        if t:
+            tr[nm] = {k: ins(v) for k, v in t.items()}
+    if spec.n_shared:
+        sh = MLPSpec(spec.mlp_kind, spec.d_model, spec.d_ff * spec.n_shared)
+        sfz, str_ = mlp_logical(sh, mode, stack)
+        if sfz:
+            fz["shared"] = sfz
+        if str_:
+            tr["shared"] = str_
+    return fz, tr
+
+
+def _expert_ffn(fz: dict, tr: dict, spec: MoESpec, buf: Array,
+                lora_scale: float) -> Array:
+    """buf: (E, C, d) -> (E, C, d), batched over experts."""
+    def bank(nm, x):
+        if nm in fz and ("w" in fz[nm] or "w_q8" in fz[nm]):
+            from repro.core.lora import frozen_weight
+            w = frozen_weight(fz[nm])
+        else:
+            w = tr[nm]["w"].astype(jnp.bfloat16)
+        y = jnp.einsum("ecd,edf->ecf", x.astype(jnp.bfloat16), w)
+        t = tr.get(nm, {})
+        if "a" in t:
+            h = jnp.einsum("ecd,edr->ecr", x.astype(jnp.bfloat16),
+                           t["a"].astype(jnp.bfloat16))
+            y = y + lora_scale * jnp.einsum(
+                "ecr,erf->ecf", h, t["b"].astype(jnp.bfloat16))
+        return y
+
+    if spec.mlp_kind == "swiglu":
+        h = jax.nn.silu(bank("wg", buf).astype(jnp.float32)).astype(
+            buf.dtype) * bank("wi", buf)
+    elif spec.mlp_kind == "geglu":
+        h = jax.nn.gelu(bank("wg", buf).astype(jnp.float32),
+                        approximate=True).astype(buf.dtype) * bank("wi", buf)
+    elif spec.mlp_kind == "sqrelu":
+        h = jax.nn.relu(bank("wi", buf))
+        h = h * h
+    else:
+        h = jax.nn.gelu(bank("wi", buf).astype(jnp.float32)).astype(buf.dtype)
+    return bank("wo", h)
+
+
+def _dispatch_chunk(fz, tr, spec: MoESpec, xt: Array, gates: Array,
+                    idx: Array, lora_scale: float) -> Array:
+    """Sort-dispatch one token chunk through the expert banks."""
+    t, d = xt.shape
+    tk = t * spec.top_k
+    flat_e = idx.reshape(tk)
+    flat_g = gates.reshape(tk)
+    flat_tok = jnp.repeat(jnp.arange(t), spec.top_k)
+    order = jnp.argsort(flat_e)                            # stable
+    se, st, sg = flat_e[order], flat_tok[order], flat_g[order]
+    counts = jnp.bincount(flat_e, length=spec.n_experts)
+    offsets = jnp.cumsum(counts) - counts
+    pos = jnp.arange(tk) - offsets[se]
+    cap = _cap(spec, t)
+    keep = pos < cap
+    pos_c = jnp.where(keep, pos, cap)                      # drop slot = cap
+
+    buf = jnp.zeros((spec.n_experts, cap + 1, d), xt.dtype)
+    gathered = pconstrain(xt[st], "tokens")
+    buf = pconstrain(buf.at[se, pos_c].set(gathered), "expert")
+    out = pconstrain(
+        _expert_ffn(fz, tr, spec, buf[:, :cap], lora_scale), "expert")
+    out = jnp.pad(out, ((0, 0), (0, 1), (0, 0)))
+    contrib = pconstrain(
+        out[se, pos_c] * (sg * keep)[:, None].astype(out.dtype), "tokens")
+    y = jnp.zeros((t, d), contrib.dtype).at[st].add(contrib)
+    return pconstrain(y, "tokens")
+
+
+def moe_apply(fz: dict, tr: dict, spec: MoESpec, x: Array,
+              lora_scale: float) -> tuple[Array, Array]:
+    """x: (B, S, d). Returns (y, aux_loss)."""
+    b, s, d = x.shape
+    t = b * s
+    xt = pconstrain(x.reshape(t, d), "tokens")
+    logits = jnp.einsum("td,de->te", xt.astype(jnp.float32),
+                        tr["router"]["w"].astype(jnp.float32))
+    probs = jax.nn.softmax(logits, axis=-1)
+    gates, idx = jax.lax.top_k(probs, spec.top_k)          # (T, k)
+    gates = gates / jnp.maximum(jnp.sum(gates, -1, keepdims=True), 1e-9)
+
+    # load-balancing aux loss (Switch): E * sum_e f_e * P_e
+    pe = jnp.mean(probs, axis=0)
+    fe = jnp.mean(
+        jnp.sum(jax.nn.one_hot(idx, spec.n_experts, dtype=jnp.float32),
+                axis=1), axis=0)
+    aux = spec.n_experts * jnp.sum(pe * fe)
+
+    n_chunks = max(1, -(-t // spec.max_chunk_tokens))
+    while t % n_chunks:
+        n_chunks += 1
+    if n_chunks == 1:
+        y = _dispatch_chunk(fz, tr, spec, xt, gates, idx, lora_scale)
+    else:
+        tc = t // n_chunks
+
+        def body(_, args):
+            xc, gc, ic = args
+            return None, _dispatch_chunk(fz, tr, spec, xc, gc, ic,
+                                         lora_scale)
+
+        body = jax.checkpoint(
+            body, policy=jax.checkpoint_policies.nothing_saveable)
+        _, yc = jax.lax.scan(
+            body, None,
+            (xt.reshape(n_chunks, tc, d),
+             gates.reshape(n_chunks, tc, spec.top_k),
+             idx.reshape(n_chunks, tc, spec.top_k)))
+        y = yc.reshape(t, d)
+
+    if spec.n_shared:
+        sh = MLPSpec(spec.mlp_kind, d, spec.d_ff * spec.n_shared)
+        y = y + mlp_apply(fz.get("shared", {}), tr.get("shared", {}),
+                          sh, xt, lora_scale)
+    return y.reshape(b, s, d).astype(x.dtype), aux

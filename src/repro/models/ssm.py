@@ -1,0 +1,252 @@
+"""Mamba-2 (SSD — state-space duality) mixer block.
+
+Implements the chunked SSD algorithm of Dao & Gu (arXiv:2405.21060):
+within-chunk quadratic (attention-like with a 1-semiseparable decay mask)
+plus an inter-chunk state recurrence (lax.scan over chunks). Decode is the
+O(1) recurrent step with an SSM-state cache and a rolling conv cache.
+
+Projections are split per component (z/x/B/C/dt) instead of one fused
+in_proj — identical math, but each output dim then shards cleanly on the
+tensor axis (DESIGN.md §3). z/x/out projections are FLoCoRA LoRA targets;
+B/C/dt projections, the depthwise conv, A_log/D/dt_bias vectors and the
+gated norm are trained densely (the paper's "norm-layer" category).
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.lora import LoRAConfig, linear_init, linear_apply, \
+    linear_logical
+from repro.models import layers as L
+
+Array = jax.Array
+
+
+@dataclasses.dataclass(frozen=True)
+class MambaSpec:
+    d_model: int
+    d_inner: int              # expand * d_model
+    head_dim: int = 64        # P
+    d_state: int = 128        # N
+    n_groups: int = 1         # G
+    conv_kernel: int = 4
+    chunk: int = 256
+
+    @property
+    def n_heads(self) -> int:
+        assert self.d_inner % self.head_dim == 0
+        return self.d_inner // self.head_dim
+
+
+def mamba_init(key: Array, spec: MambaSpec, mode: str, lora: LoRAConfig,
+               stack: tuple[int, ...] = ()) -> tuple[dict, dict]:
+    ks = jax.random.split(key, 8)
+    gn = spec.n_groups * spec.d_state
+    fz, tr = {}, {}
+    for k_, nm, dout, m in (
+            (ks[0], "wz", spec.d_inner, mode),
+            (ks[1], "wx", spec.d_inner, mode),
+            (ks[2], "wb", gn, "dense"),
+            (ks[3], "wc", gn, "dense"),
+            (ks[4], "wdt", spec.n_heads, "dense")):
+        f, t = linear_init(k_, spec.d_model, dout, m, lora, stack)
+        if f:
+            fz[nm] = f
+        if t:
+            tr[nm] = t
+    f, t = linear_init(ks[5], spec.d_inner, spec.d_model, mode, lora, stack)
+    if f:
+        fz["wo"] = f
+    if t:
+        tr["wo"] = t
+    convdim = spec.d_inner + 2 * gn
+    tr["conv"] = {"w": jax.random.normal(
+        ks[6], (*stack, spec.conv_kernel, convdim), jnp.float32) * 0.1,
+        "b": jnp.zeros((*stack, convdim), jnp.float32)}
+    h = spec.n_heads
+    tr["A_log"] = jnp.log(jnp.broadcast_to(
+        jnp.linspace(1.0, 16.0, h), (*stack, h)).astype(jnp.float32))
+    tr["D"] = jnp.ones((*stack, h), jnp.float32)
+    tr["dt_bias"] = jnp.broadcast_to(
+        jnp.log(jnp.expm1(jnp.full((h,), 0.01))), (*stack, h)
+    ).astype(jnp.float32)
+    tr["norm"] = L.rmsnorm_init(spec.d_inner, stack)
+    return fz, tr
+
+
+def mamba_logical(spec: MambaSpec, mode: str, stack: bool
+                  ) -> tuple[dict, dict]:
+    pre = ("layers",) if stack else ()
+    fz, tr = {}, {}
+    for nm, dims, m in (("wz", ("fsdp", "ssm_inner"), mode),
+                        ("wx", ("fsdp", "ssm_inner"), mode),
+                        ("wb", ("fsdp", None), "dense"),
+                        ("wc", ("fsdp", None), "dense"),
+                        ("wdt", ("fsdp", None), "dense"),
+                        ("wo", ("ssm_inner", "fsdp"), mode)):
+        f, t = linear_logical(*dims, m, stack)
+        if f:
+            fz[nm] = f
+        if t:
+            tr[nm] = t
+    tr["conv"] = {"w": (*pre, None, "ssm_inner"), "b": (*pre, "ssm_inner")}
+    tr["A_log"] = (*pre, None)
+    tr["D"] = (*pre, None)
+    tr["dt_bias"] = (*pre, None)
+    tr["norm"] = {"scale": (*pre, "ssm_inner")}
+    return fz, tr
+
+
+def _proj(fz, tr, nm, x, scale):
+    return linear_apply(fz.get(nm, {}), tr.get(nm, {}), x, scale)
+
+
+def _causal_depthwise_conv(xbc: Array, w: Array, b: Array,
+                           state: Array | None = None):
+    """xbc: (B, S, C); w: (K, C). Returns (y, new_state (B, K-1, C))."""
+    k = w.shape[0]
+    if state is None:
+        pad = jnp.zeros((xbc.shape[0], k - 1, xbc.shape[2]), xbc.dtype)
+    else:
+        pad = state.astype(xbc.dtype)
+    xp = jnp.concatenate([pad, xbc], axis=1)
+    y = sum(xp[:, i:i + xbc.shape[1]] * w[i].astype(xbc.dtype)
+            for i in range(k))
+    y = jax.nn.silu((y + b.astype(y.dtype)).astype(jnp.float32)
+                    ).astype(xbc.dtype)
+    new_state = xp[:, xbc.shape[1]:]
+    return y, new_state
+
+
+def mamba_apply(fz: dict, tr: dict, spec: MambaSpec, x: Array,
+                lora_scale: float) -> Array:
+    """Training / prefill forward: (B, S, d) -> (B, S, d), chunked SSD."""
+    bsz, s0, _ = x.shape
+    h, p, n, g = spec.n_heads, spec.head_dim, spec.d_state, spec.n_groups
+    lc = min(spec.chunk, s0)
+    pad = (-s0) % lc
+    if pad:                      # causal: tail padding never affects [:s0]
+        x = jnp.pad(x, ((0, 0), (0, pad), (0, 0)))
+    s = s0 + pad
+    nc = s // lc
+
+    z = _proj(fz, tr, "wz", x, lora_scale)
+    xs = _proj(fz, tr, "wx", x, lora_scale)
+    bmat = _proj(fz, tr, "wb", x, lora_scale)
+    cmat = _proj(fz, tr, "wc", x, lora_scale)
+    dt = _proj(fz, tr, "wdt", x, lora_scale).astype(jnp.float32)
+
+    xbc = jnp.concatenate([xs, bmat, cmat], axis=-1)
+    xbc, _ = _causal_depthwise_conv(xbc, tr["conv"]["w"], tr["conv"]["b"])
+    xs = xbc[..., : spec.d_inner]
+    bmat = xbc[..., spec.d_inner: spec.d_inner + g * n]
+    cmat = xbc[..., spec.d_inner + g * n:]
+
+    dt = jax.nn.softplus(dt + tr["dt_bias"])               # (B,S,H)
+    a = -jnp.exp(tr["A_log"].astype(jnp.float32))          # (H,)
+
+    xh = xs.reshape(bsz, nc, lc, h, p)
+    bh = bmat.reshape(bsz, nc, lc, g, n)
+    ch = cmat.reshape(bsz, nc, lc, g, n)
+    dth = dt.reshape(bsz, nc, lc, h)
+    da = dth * a                                            # (B,nc,Lc,H)
+    cum = jnp.cumsum(da, axis=2)
+
+    # ---- intra-chunk (diagonal block): decay mask L[i,j] = exp(cum_i-cum_j)
+    seg = cum[:, :, :, None, :] - cum[:, :, None, :, :]     # (B,nc,Lc,Ls,H)
+    ii, jj = jnp.arange(lc)[:, None], jnp.arange(lc)[None, :]
+    tril = (ii >= jj)[None, None, :, :, None]
+    decay = jnp.where(tril, jnp.exp(seg), 0.0)
+    cb = jnp.einsum("bclgn,bcsgn->bcls", ch.astype(jnp.float32),
+                    bh.astype(jnp.float32))                 # g == 1
+    scores = cb[..., None] * decay * dth[:, :, None, :, :]  # (B,nc,Lc,Ls,H)
+    y_intra = jnp.einsum("bclsh,bcshp->bclhp",
+                         scores.astype(jnp.bfloat16),
+                         xh.astype(jnp.bfloat16)).astype(jnp.float32)
+
+    # ---- chunk states and inter-chunk recurrence
+    last = cum[:, :, -1:, :]                                # (B,nc,1,H)
+    wdecay = jnp.exp(last - cum) * dth                      # (B,nc,Lc,H)
+    states = jnp.einsum("bclgn,bclh,bclhp->bchpn",
+                        bh.astype(jnp.float32), wdecay,
+                        xh.astype(jnp.float32))             # (B,nc,H,P,N)
+    chunk_decay = jnp.exp(last[:, :, 0])                    # (B,nc,H)
+
+    def scan_fn(hprev, inp):
+        st, cd = inp
+        hnew = hprev * cd[..., None, None] + st
+        return hnew, hprev
+
+    h0 = jnp.zeros((bsz, h, p, n), jnp.float32)
+    _, hprevs = jax.lax.scan(
+        scan_fn, h0,
+        (states.transpose(1, 0, 2, 3, 4), chunk_decay.transpose(1, 0, 2)))
+    hprevs = hprevs.transpose(1, 0, 2, 3, 4)                # (B,nc,H,P,N)
+
+    outdecay = jnp.exp(cum)                                 # (B,nc,Lc,H)
+    y_inter = jnp.einsum("bclgn,bchpn,bclh->bclhp",
+                         ch.astype(jnp.float32), hprevs, outdecay)
+
+    y = (y_intra + y_inter).reshape(bsz, s, h, p)
+    y = y + tr["D"].astype(jnp.float32)[None, None, :, None] \
+        * xs.reshape(bsz, s, h, p).astype(jnp.float32)
+    y = y.reshape(bsz, s, spec.d_inner).astype(x.dtype)
+    y = L.rmsnorm_apply(tr["norm"],
+                        y * jax.nn.silu(z.astype(jnp.float32)).astype(y.dtype))
+    if pad:
+        y = y[:, :s0]
+    return _proj(fz, tr, "wo", y, lora_scale)
+
+
+def mamba_cache_init(spec: MambaSpec, batch: int, dtype=jnp.float32) -> dict:
+    gn = spec.n_groups * spec.d_state
+    return {
+        "ssm": jnp.zeros((batch, spec.n_heads, spec.head_dim, spec.d_state),
+                         jnp.float32),
+        "conv": jnp.zeros((batch, spec.conv_kernel - 1,
+                           spec.d_inner + 2 * gn), dtype),
+    }
+
+
+def mamba_cache_logical() -> dict:
+    return {"ssm": ("batch", "ssm_heads", None, None),
+            "conv": ("batch", None, "ssm_inner")}
+
+
+def mamba_decode(fz: dict, tr: dict, spec: MambaSpec, x: Array,
+                 cache: dict, lora_scale: float) -> tuple[Array, dict]:
+    """x: (B, 1, d). O(1) recurrent step."""
+    bsz = x.shape[0]
+    h, p, n, g = spec.n_heads, spec.head_dim, spec.d_state, spec.n_groups
+    z = _proj(fz, tr, "wz", x, lora_scale)
+    xs = _proj(fz, tr, "wx", x, lora_scale)
+    bmat = _proj(fz, tr, "wb", x, lora_scale)
+    cmat = _proj(fz, tr, "wc", x, lora_scale)
+    dt = _proj(fz, tr, "wdt", x, lora_scale).astype(jnp.float32)
+
+    xbc = jnp.concatenate([xs, bmat, cmat], axis=-1)
+    xbc, conv_state = _causal_depthwise_conv(
+        xbc, tr["conv"]["w"], tr["conv"]["b"], cache["conv"])
+    xs = xbc[..., : spec.d_inner][:, 0]                     # (B, d_inner)
+    bvec = xbc[..., spec.d_inner: spec.d_inner + g * n][:, 0]
+    cvec = xbc[..., spec.d_inner + g * n:][:, 0]
+
+    dt = jax.nn.softplus(dt[:, 0] + tr["dt_bias"])          # (B,H)
+    a = -jnp.exp(tr["A_log"].astype(jnp.float32))
+    da = jnp.exp(dt * a)                                    # (B,H)
+    xh = xs.reshape(bsz, h, p).astype(jnp.float32)
+    bn = bvec.reshape(bsz, g, n).astype(jnp.float32)[:, 0]  # (B,N)
+    cn = cvec.reshape(bsz, g, n).astype(jnp.float32)[:, 0]
+
+    ssm = cache["ssm"] * da[..., None, None] \
+        + (dt[..., None] * xh)[..., None] * bn[:, None, None, :]
+    y = jnp.einsum("bhpn,bn->bhp", ssm, cn) \
+        + tr["D"].astype(jnp.float32)[None, :, None] * xh
+    y = y.reshape(bsz, 1, spec.d_inner).astype(x.dtype)
+    y = L.rmsnorm_apply(tr["norm"],
+                        y * jax.nn.silu(z.astype(jnp.float32)).astype(y.dtype))
+    return _proj(fz, tr, "wo", y, lora_scale), \
+        {"ssm": ssm, "conv": conv_state}

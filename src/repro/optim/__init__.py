@@ -1,0 +1,2 @@
+from repro.optim.optimizers import Optimizer, sgd, adamw, clip_by_global_norm
+from repro.optim.schedule import constant, cosine_warmup

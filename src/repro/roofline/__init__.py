@@ -1,0 +1,2 @@
+from repro.roofline.analysis import collective_bytes, roofline_terms, \
+    HW, model_flops

@@ -1,0 +1,11 @@
+from repro.utils.tree import (
+    tree_size,
+    tree_bytes,
+    tree_map_with_path,
+    tree_zeros_like,
+    tree_add,
+    tree_sub,
+    tree_scale,
+    tree_weighted_sum,
+    flatten_with_names,
+)

@@ -1,0 +1,41 @@
+"""Trace-time sharding-constraint context.
+
+The model code is mesh-agnostic; the launcher installs a constraint
+callback around tracing (jit caches the traced graph, so a context
+manager at trace time is enough). Layers call ``constrain(x, kind)`` at
+the points where XLA's sharding propagation is known to drop shardings
+(scan xs/ys buffers, gather/scatter outputs) — without a callback these
+are no-ops, so unit tests and the 1-device path are untouched.
+
+Kinds (see launch.steps.make_constrain):
+  residual    (B, S, D)      batch x [seq-parallel] x -
+  heads       (B, S, H, Dh)  batch x - x model x -
+  kv_chunks   (N, B, C, H, D) - x batch x - x model x -
+  tokens      (T, D)         batch x -
+  expert      (E, C, D)      model x - x -
+  cache4      (B, S, Hkv, D) batch x model-on-seq x - x -
+  cache3      (B, S, C)      batch x model-on-seq x -
+"""
+from __future__ import annotations
+
+import contextlib
+from typing import Callable, Optional
+
+_current: Optional[Callable] = None
+
+
+@contextlib.contextmanager
+def use(fn: Callable):
+    global _current
+    prev = _current
+    _current = fn
+    try:
+        yield
+    finally:
+        _current = prev
+
+
+def constrain(x, kind: str):
+    if _current is None:
+        return x
+    return _current(x, kind)

@@ -1,0 +1,118 @@
+"""Logical-axis sharding rules (MaxText-style, hand-rolled).
+
+Every param leaf in the model zoo is annotated with a tuple of *logical*
+axis names (one per dim, ``None`` for unsharded). A rules table maps
+logical names to physical mesh axes. ``logical_to_spec`` resolves the
+annotation into a ``PartitionSpec``, dropping any mapping whose mesh-axis
+size does not divide the dim (best-effort sharding — indivisible dims
+fall back to replication rather than erroring, which matters for LoRA
+adapters whose rank dim is tiny).
+"""
+from __future__ import annotations
+
+from typing import Any, Optional, Sequence
+
+import jax
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+# Default logical->physical rules for the (data, model) production mesh.
+# 'fsdp' shards weights over the data axis (ZeRO-3 style); 'tensor' is TP.
+DEFAULT_RULES: dict[str, Any] = {
+    # activations
+    "batch": ("pod", "data"),      # global batch over pod x data
+    "seq": None,
+    "act_embed": None,
+    "act_heads": "model",
+    "act_kv": None,
+    # weights
+    "embed": "model",              # d_model dim of weight matrices (TP)
+    "vocab": "model",
+    "mlp": "model",                # d_ff dim (TP)
+    "heads": "model",              # attention head dim products
+    "kv_heads": None,
+    "qkv": "model",
+    "expert": "model",             # MoE expert axis (EP)
+    "fsdp": "data",                # the dim chosen for ZeRO-3 sharding
+    "layers": None,                # scan axis, never sharded
+    "lora_rank": None,             # rank r is tiny -> replicated
+    "conv_in": None,
+    "conv_out": "model",
+    "kv_lora": None,
+    "ssm_state": None,
+    "ssm_inner": "model",
+    "ssm_heads": "model",
+    "kv_proj": None,            # kv heads are few; replicate projections
+    "kv_seq": ("model", "data"),  # split-KV decode over chips
+    "mlp_nosplit": None,        # per-expert ff dim (expert axis is EP)
+}
+
+
+def logical_to_spec(
+    logical: Sequence[Optional[str]],
+    shape: Sequence[int],
+    mesh: Mesh,
+    rules: Optional[dict] = None,
+) -> P:
+    """Resolve logical axis names into a PartitionSpec for `mesh`.
+
+    Drops assignments where the mesh axis size does not divide the dim,
+    and never assigns the same mesh axis twice (first dim wins).
+    """
+    rules = dict(DEFAULT_RULES if rules is None else rules)
+    axis_sizes = dict(zip(mesh.axis_names, mesh.devices.shape))
+    used: set[str] = set()
+    out = []
+    for name, dim in zip(logical, shape):
+        phys = rules.get(name) if name is not None else None
+        if phys is None:
+            out.append(None)
+            continue
+        cand = (phys,) if isinstance(phys, str) else tuple(phys)
+        # keep only axes that exist in this mesh, are unused, and divide dim
+        kept = []
+        prod = 1
+        for ax in cand:
+            if ax not in axis_sizes or ax in used:
+                continue
+            if dim % (prod * axis_sizes[ax]) == 0:
+                kept.append(ax)
+                prod *= axis_sizes[ax]
+        if not kept:
+            out.append(None)
+        elif len(kept) == 1:
+            out.append(kept[0])
+            used.add(kept[0])
+        else:
+            out.append(tuple(kept))
+            used.update(kept)
+    return P(*out)
+
+
+def tree_shardings(
+    logical_tree: Any,
+    shape_tree: Any,
+    mesh: Mesh,
+    rules: Optional[dict] = None,
+) -> Any:
+    """Map a tree of logical annotations + a matching tree of shapes
+    (ShapeDtypeStruct or arrays) to a tree of NamedShardings."""
+    def _one(logical, arr):
+        spec = logical_to_spec(logical, arr.shape, mesh, rules)
+        return NamedSharding(mesh, spec)
+
+    return jax.tree.map(
+        _one, logical_tree, shape_tree,
+        is_leaf=lambda x: isinstance(x, tuple) and all(
+            isinstance(e, (str, type(None))) for e in x
+        ),
+    )
+
+
+def mesh_axis_size(mesh: Mesh, name: str) -> int:
+    sizes = dict(zip(mesh.axis_names, mesh.devices.shape))
+    return sizes.get(name, 1)
+
+
+def num_chips(mesh: Mesh) -> int:
+    return int(np.prod(mesh.devices.shape))

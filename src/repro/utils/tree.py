@@ -1,0 +1,81 @@
+"""Pytree utilities used across the framework.
+
+Params everywhere in this codebase are plain nested dicts of jnp arrays
+(no flax). These helpers give the few tree algebra ops the FL runtime and
+optimizers need, plus name-aware iteration for sharding-rule matching.
+"""
+from __future__ import annotations
+
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def tree_size(tree: Any) -> int:
+    """Total number of elements across all leaves."""
+    return sum(int(np.prod(x.shape)) for x in jax.tree.leaves(tree))
+
+
+def tree_bytes(tree: Any) -> int:
+    """Total bytes across all leaves (by dtype itemsize)."""
+    return sum(
+        int(np.prod(x.shape)) * jnp.dtype(x.dtype).itemsize
+        for x in jax.tree.leaves(tree)
+    )
+
+
+def _path_str(path) -> str:
+    parts = []
+    for p in path:
+        if isinstance(p, jax.tree_util.DictKey):
+            parts.append(str(p.key))
+        elif isinstance(p, jax.tree_util.SequenceKey):
+            parts.append(str(p.idx))
+        elif isinstance(p, jax.tree_util.GetAttrKey):
+            parts.append(str(p.name))
+        else:
+            parts.append(str(p))
+    return "/".join(parts)
+
+
+def tree_map_with_path(fn: Callable[[str, Any], Any], tree: Any) -> Any:
+    """Map ``fn(name, leaf)`` over the tree, where name is 'a/b/c'."""
+    return jax.tree_util.tree_map_with_path(
+        lambda path, x: fn(_path_str(path), x), tree
+    )
+
+
+def flatten_with_names(tree: Any) -> list[tuple[str, Any]]:
+    """Flatten into [(path_string, leaf), ...] in deterministic order."""
+    flat, _ = jax.tree_util.tree_flatten_with_path(tree)
+    return [(_path_str(path), leaf) for path, leaf in flat]
+
+
+def tree_zeros_like(tree: Any) -> Any:
+    return jax.tree.map(jnp.zeros_like, tree)
+
+
+def tree_add(a: Any, b: Any) -> Any:
+    return jax.tree.map(lambda x, y: x + y, a, b)
+
+
+def tree_sub(a: Any, b: Any) -> Any:
+    return jax.tree.map(lambda x, y: x - y, a, b)
+
+
+def tree_scale(a: Any, s) -> Any:
+    return jax.tree.map(lambda x: x * s, a)
+
+
+def tree_weighted_sum(trees: list[Any], weights) -> Any:
+    """sum_i weights[i] * trees[i], leafwise. weights: 1-D array-like."""
+    weights = jnp.asarray(weights)
+
+    def _leafsum(*leaves):
+        stacked = jnp.stack(leaves, axis=0)
+        w = weights.reshape((-1,) + (1,) * (stacked.ndim - 1))
+        return jnp.sum(stacked * w.astype(stacked.dtype), axis=0)
+
+    return jax.tree.map(_leafsum, *trees)

@@ -1,0 +1,10 @@
+import os
+import sys
+
+# single-device for unit tests — the 512-device mesh is exercised only by
+# the dry-run (its own process sets the XLA flag before importing jax)
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+import jax  # noqa: E402
+
+jax.config.update("jax_enable_x64", False)

@@ -1,0 +1,149 @@
+"""Serving-path equivalence: prefill+decode must reproduce the training
+forward (teacher forcing) for every attention family, and chunked SSD
+must equal the sequential recurrence."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.lora import LoRAConfig, linear_apply
+from repro.models import encdec as ED
+from repro.models import lm as LM
+from repro.models import layers as L
+from repro.models import ssm as S
+from repro.models.attention import MLASpec
+from repro.models.ssm import MambaSpec
+
+LORA = LoRAConfig(rank=4, alpha=64)
+TOL = 5e-2   # bf16 end-to-end logits tolerance
+
+
+def _check_decode_matches_forward(cfg, seed=0):
+    k = jax.random.PRNGKey(seed)
+    p = LM.init(k, cfg)
+    toks = jax.random.randint(k, (2, 17), 0, cfg.vocab)
+    lp, caches, pos = jax.jit(
+        lambda f, t, tok: LM.prefill(f, t, cfg, tok, max_seq=24))(
+        p["frozen"], p["train"], toks[:, :16])
+    ld, _ = jax.jit(
+        lambda f, t, tok, c, pos: LM.decode_step(f, t, cfg, tok, c, pos))(
+        p["frozen"], p["train"], toks[:, 16:17], caches, pos)
+    h, _ = LM.forward(p["frozen"], p["train"], cfg, toks)
+    fl = linear_apply(p["frozen"].get("head", {}), p["train"].get("head", {}),
+                      h, cfg.lora.scale)
+    err_prefill = float(jnp.max(jnp.abs(lp - fl[:, 15])))
+    err_decode = float(jnp.max(jnp.abs(ld[:, 0] - fl[:, 16])))
+    assert err_prefill < TOL, f"prefill {err_prefill}"
+    assert err_decode < TOL, f"decode {err_decode}"
+
+
+def test_gqa_decode_consistency():
+    _check_decode_matches_forward(LM.LMConfig(
+        name="t", n_layers=3, d_model=64, n_heads=4, n_kv_heads=2,
+        head_dim=16, d_ff=128, vocab=256, lora=LORA))
+
+
+def test_gqa_padded_heads_decode_consistency():
+    _check_decode_matches_forward(LM.LMConfig(
+        name="t", n_layers=2, d_model=48, n_heads=3, n_kv_heads=1,
+        head_dim=16, d_ff=96, vocab=128, pad_heads_to=4, lora=LORA))
+
+
+def test_mla_decode_consistency():
+    _check_decode_matches_forward(LM.LMConfig(
+        name="t", n_layers=3, d_model=64, n_heads=4, n_kv_heads=4,
+        head_dim=16, d_ff=128, vocab=256, attn_kind="mla",
+        mla=MLASpec(d_model=64, n_heads=4, q_lora_rank=32, kv_lora_rank=16,
+                    qk_nope_dim=16, qk_rope_dim=8, v_head_dim=16),
+        lora=LORA))
+
+
+def test_sliding_window_ring_cache_consistency():
+    _check_decode_matches_forward(LM.LMConfig(
+        name="t", n_layers=7, d_model=64, n_heads=4, n_kv_heads=2,
+        head_dim=16, d_ff=128, vocab=256, window=8, window_pattern=3,
+        rope_base_global=1e5, qk_norm=True, lora=LORA))
+
+
+def test_mamba_decode_consistency():
+    _check_decode_matches_forward(LM.LMConfig(
+        name="t", n_layers=4, d_model=64, n_heads=4, n_kv_heads=4,
+        head_dim=16, d_ff=0, vocab=256, attn_kind="none",
+        mamba=MambaSpec(d_model=64, d_inner=128, head_dim=16, d_state=16,
+                        chunk=8), lora=LORA))
+
+
+def test_zamba_shared_attn_decode_consistency():
+    _check_decode_matches_forward(LM.LMConfig(
+        name="t", n_layers=4, d_model=64, n_heads=4, n_kv_heads=4,
+        head_dim=16, d_ff=128, vocab=256,
+        mamba=MambaSpec(d_model=64, d_inner=128, head_dim=16, d_state=16,
+                        chunk=8),
+        shared_attn_every=2, lora=LORA))
+
+
+def test_ssd_equals_sequential_recurrence():
+    spec = MambaSpec(d_model=32, d_inner=64, head_dim=16, d_state=8,
+                     chunk=8)
+    fz, tr = S.mamba_init(jax.random.PRNGKey(0), spec, "lora", LORA)
+    x = jax.random.normal(jax.random.PRNGKey(1), (2, 32, 32)) * 0.5
+    y_ssd = S.mamba_apply(fz, tr, spec, x, LORA.scale)
+    c = S.mamba_cache_init(spec, 2)
+    ys = []
+    for t in range(32):
+        y, c = S.mamba_decode(fz, tr, spec, x[:, t:t + 1], c, LORA.scale)
+        ys.append(y)
+    y_seq = jnp.concatenate(ys, axis=1)
+    err = float(jnp.max(jnp.abs(y_ssd.astype(jnp.float32)
+                                - y_seq.astype(jnp.float32))))
+    assert err < 1e-2
+
+
+def test_local_attention_equals_masked_full():
+    q = jax.random.normal(jax.random.PRNGKey(0), (2, 24, 4, 16))
+    k = jax.random.normal(jax.random.PRNGKey(1), (2, 24, 2, 16))
+    v = jax.random.normal(jax.random.PRNGKey(2), (2, 24, 2, 16))
+    w = 8
+    o = L.local_attention_blocked(q, k, v, window=w)
+    kr, vr = L._repeat_kv(k, 2), L._repeat_kv(v, 2)
+    s_ = jnp.einsum("bqhd,bkhd->bhqk", q * 16 ** -0.5, kr)
+    qp, kp = jnp.arange(24)[:, None], jnp.arange(24)[None, :]
+    mask = (kp <= qp) & (kp > qp - w)
+    s_ = jnp.where(mask[None, None], s_, -jnp.inf)
+    o_ref = jnp.einsum("bhqk,bkhd->bqhd", jax.nn.softmax(s_, -1), vr)
+    assert float(jnp.max(jnp.abs(o - o_ref))) < 2e-2
+
+
+def test_chunked_attention_equals_full_softmax():
+    q = jax.random.normal(jax.random.PRNGKey(0), (2, 20, 4, 16))
+    k = jax.random.normal(jax.random.PRNGKey(1), (2, 20, 4, 16))
+    v = jax.random.normal(jax.random.PRNGKey(2), (2, 20, 4, 16))
+    o = L.attention_chunked(q, k, v, causal=True, kv_chunk=7)
+    s_ = jnp.einsum("bqhd,bkhd->bhqk", q * 16 ** -0.5, k)
+    qp, kp = jnp.arange(20)[:, None], jnp.arange(20)[None, :]
+    s_ = jnp.where((kp <= qp)[None, None], s_, -jnp.inf)
+    o_ref = jnp.einsum("bhqk,bkhd->bqhd", jax.nn.softmax(s_, -1), v)
+    assert float(jnp.max(jnp.abs(o - o_ref))) < 2e-2
+
+
+def test_encdec_stepwise_equals_teacher_forcing():
+    cfg = ED.EncDecConfig(name="t", n_enc_layers=2, n_dec_layers=2,
+                          d_model=32, n_heads=4, n_kv_heads=4, head_dim=8,
+                          d_ff=64, vocab=128, lora=LORA)
+    p = ED.init(jax.random.PRNGKey(0), cfg)
+    src = jax.random.normal(jax.random.PRNGKey(1), (2, 12, 32))
+    tgt = jax.random.randint(jax.random.PRNGKey(2), (2, 9), 0, 128)
+    mem = ED.encode(p["frozen"], p["train"], cfg, src)
+    cc = ED.cross_cache(p["frozen"], p["train"], cfg, mem)
+    c = ED.self_cache_init(cfg, 2, 16)
+    outs = []
+    step = jax.jit(lambda tok, c, pos: ED.decode_step(
+        p["frozen"], p["train"], cfg, tok, c, cc, pos))
+    for t in range(9):
+        lg, c = step(tgt[:, t:t + 1], c, jnp.asarray(t, jnp.int32))
+        outs.append(lg)
+    ld = jnp.concatenate(outs, 1)
+    h = ED.decode_train(p["frozen"], p["train"], cfg, tgt, mem)
+    fl = linear_apply(p["frozen"].get("head", {}),
+                      p["train"].get("head", {}), h, cfg.lora.scale)
+    assert float(jnp.max(jnp.abs(ld - fl))) < TOL

@@ -1,0 +1,101 @@
+"""Pallas kernels vs pure-jnp oracles (interpret mode on CPU; shape/dtype
+sweeps + hypothesis)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.kernels import ops, ref
+
+
+@pytest.mark.parametrize("bits", [2, 4, 8])
+@pytest.mark.parametrize("shape", [(8, 2048), (16, 512), (5, 100), (1, 64)])
+def test_quant_pack_matches_ref(bits, shape):
+    per = 32 // bits
+    x = jax.random.normal(jax.random.fold_in(jax.random.PRNGKey(0), bits),
+                          shape) * 2.0
+    p, s, z = ops.quant_pack(x, bits)
+    # reconstruct and compare against the direct jnp reference
+    pad_n = (-shape[1]) % (per * 128)
+    pr, sr, zr = ref.quant_pack_ref(
+        jnp.pad(x, ((0, 0), (0, pad_n))), bits)
+    lv = ref.unpack_words(p, bits)[:, : shape[1]]
+    lvr = ref.unpack_words(pr, bits)[: shape[0], : shape[1]]
+    rec = (lv.astype(jnp.float32) - z[:, None]) * s[:, None]
+    recr = (lvr.astype(jnp.float32) - zr[: shape[0], None]) \
+        * sr[: shape[0], None]
+    np.testing.assert_allclose(np.asarray(rec), np.asarray(recr),
+                               atol=1e-5)
+    # and the quantization bound holds
+    err = float(jnp.max(jnp.abs(rec - x)))
+    assert err <= float(jnp.max(s)) / 2 + 1e-5
+
+
+@pytest.mark.parametrize("bits", [2, 4, 8])
+@pytest.mark.parametrize("k", [1, 3, 7])
+def test_dequant_agg_matches_ref(bits, k):
+    key = jax.random.PRNGKey(k)
+    c, n = 16, 32 * (32 // bits)
+    xs = jax.random.normal(key, (k, c, n))
+    packs, ss, zs = [], [], []
+    for i in range(k):
+        p, s, z = ref.quant_pack_ref(xs[i], bits)
+        packs.append(p)
+        ss.append(s)
+        zs.append(z)
+    packed = jnp.stack(packs)
+    sc = jnp.stack(ss)
+    zp = jnp.stack(zs)
+    w = jax.random.uniform(key, (k,)) + 0.1
+    out = ops.dequant_agg(packed, sc, zp, w, bits)
+    outr = ref.dequant_agg_ref(packed, sc, zp, w, bits)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(outr),
+                               rtol=1e-5, atol=1e-5)
+
+
+@pytest.mark.parametrize("m,k,n,r", [
+    (128, 256, 192, 8), (64, 128, 128, 32), (256, 512, 256, 128),
+    (8, 128, 128, 4),
+])
+def test_lora_matmul_matches_ref(m, k, n, r):
+    key = jax.random.PRNGKey(0)
+    x = (jax.random.normal(key, (m, k)) * 0.5).astype(jnp.bfloat16)
+    w = (jax.random.normal(jax.random.fold_in(key, 1), (k, n)) * 0.1
+         ).astype(jnp.bfloat16)
+    a = (jax.random.normal(jax.random.fold_in(key, 2), (k, r)) * 0.1
+         ).astype(jnp.bfloat16)
+    b = (jax.random.normal(jax.random.fold_in(key, 3), (r, n)) * 0.1
+         ).astype(jnp.bfloat16)
+    y = ops.lora_matmul(x, w, a, b, 2.0).astype(jnp.float32)
+    yr = ref.lora_matmul_ref(x, w, a, b, 2.0).astype(jnp.float32)
+    scale = float(jnp.max(jnp.abs(yr))) + 1e-6
+    assert float(jnp.max(jnp.abs(y - yr))) / scale < 2e-2   # bf16 tol
+
+
+def test_lora_matmul_zero_adapter_is_base():
+    key = jax.random.PRNGKey(0)
+    x = (jax.random.normal(key, (64, 128))).astype(jnp.bfloat16)
+    w = (jax.random.normal(jax.random.fold_in(key, 1), (128, 128)) * 0.1
+         ).astype(jnp.bfloat16)
+    a = (jax.random.normal(jax.random.fold_in(key, 2), (128, 8)) * 0.1
+         ).astype(jnp.bfloat16)
+    b = jnp.zeros((8, 128), jnp.bfloat16)
+    y = ops.lora_matmul(x, w, a, b, 16.0).astype(jnp.float32)
+    yr = (x.astype(jnp.float32) @ w.astype(jnp.float32))
+    scale = float(jnp.max(jnp.abs(yr))) + 1e-6
+    assert float(jnp.max(jnp.abs(y - yr))) / scale < 1e-2
+
+
+@settings(max_examples=20, deadline=None)
+@given(bits=st.sampled_from([2, 4, 8]), c=st.integers(1, 24),
+       n=st.integers(2, 200), seed=st.integers(0, 2**31 - 1))
+def test_property_quant_pack_sweep(bits, c, n, seed):
+    rng = np.random.default_rng(seed)
+    x = jnp.asarray(rng.normal(size=(c, n)) * rng.uniform(0.01, 10),
+                    jnp.float32)
+    p, s, z = ops.quant_pack(x, bits)
+    lv = ref.unpack_words(p, bits)[:, :n]
+    rec = (lv.astype(jnp.float32) - z[:, None]) * s[:, None]
+    err = np.asarray(jnp.abs(rec - x))
+    assert (err <= np.asarray(s)[:, None] / 2 + 1e-4).all()

@@ -1,0 +1,106 @@
+"""LoRA adapter correctness: merge equivalence, zero-init identity,
+conv decomposition (Huh et al.) against a dense-merged oracle."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import lora
+from repro.core.lora import LoRAConfig
+
+
+def test_dense_zero_init_is_identity():
+    cfg = LoRAConfig(rank=8, alpha=128)
+    ad = lora.dense_lora_init(jax.random.PRNGKey(0), 32, 48, cfg)
+    x = jax.random.normal(jax.random.PRNGKey(1), (4, 32))
+    y = lora.dense_lora_apply(x, ad["a"], ad["b"], cfg.scale, jnp.float32)
+    assert float(jnp.max(jnp.abs(y))) == 0.0   # b zeros -> adapter silent
+
+
+def test_dense_merge_equivalence():
+    cfg = LoRAConfig(rank=4, alpha=64)
+    k = jax.random.PRNGKey(0)
+    w = jax.random.normal(k, (32, 48))
+    a = jax.random.normal(jax.random.fold_in(k, 1), (32, 4)) * 0.2
+    b = jax.random.normal(jax.random.fold_in(k, 2), (4, 48)) * 0.2
+    x = jax.random.normal(jax.random.fold_in(k, 3), (8, 32))
+    y1 = x @ w + lora.dense_lora_apply(x, a, b, cfg.scale, jnp.float32)
+    y2 = x @ lora.dense_merge(w, a, b, cfg.scale)
+    np.testing.assert_allclose(np.asarray(y1), np.asarray(y2), atol=1e-4)
+
+
+def test_conv_merge_equivalence():
+    """conv(x, P) + (α/r)·conv1x1(conv(x, B), A) == conv(x, P_merged)."""
+    cfg = LoRAConfig(rank=3, alpha=12)
+    k = jax.random.PRNGKey(0)
+    p = jax.random.normal(k, (3, 3, 5, 7)) * 0.3          # HWIO
+    ad = lora.conv_lora_init(jax.random.fold_in(k, 1), 3, 3, 5, 7, cfg)
+    ad = {"b": ad["b"],
+          "a": jax.random.normal(jax.random.fold_in(k, 2),
+                                 ad["a"].shape) * 0.2}
+    x = jax.random.normal(jax.random.fold_in(k, 3), (2, 8, 8, 5))
+    dn = jax.lax.conv_dimension_numbers(x.shape, p.shape,
+                                        ("NHWC", "HWIO", "NHWC"))
+    base = jax.lax.conv_general_dilated(x, p, (1, 1), "SAME",
+                                        dimension_numbers=dn)
+    y1 = base + lora.conv_lora_apply(x, ad["b"], ad["a"], cfg.scale,
+                                     (1, 1), "SAME")
+    pm = lora.conv_merge(p, ad["b"], ad["a"], cfg.scale)
+    y2 = jax.lax.conv_general_dilated(x, pm, (1, 1), "SAME",
+                                      dimension_numbers=dn)
+    np.testing.assert_allclose(np.asarray(y1), np.asarray(y2),
+                               rtol=1e-4, atol=1e-4)
+
+
+def test_conv_merge_strided():
+    """Merge must also hold under stride (B conv takes the stride)."""
+    cfg = LoRAConfig(rank=2, alpha=8)
+    k = jax.random.PRNGKey(0)
+    p = jax.random.normal(k, (3, 3, 4, 6)) * 0.3
+    ad = {"b": jax.random.normal(jax.random.fold_in(k, 1), (3, 3, 4, 2)),
+          "a": jax.random.normal(jax.random.fold_in(k, 2), (1, 1, 2, 6))}
+    x = jax.random.normal(jax.random.fold_in(k, 3), (2, 9, 9, 4))
+    dn = jax.lax.conv_dimension_numbers(x.shape, p.shape,
+                                        ("NHWC", "HWIO", "NHWC"))
+    y1 = jax.lax.conv_general_dilated(x, p, (2, 2), "SAME",
+                                      dimension_numbers=dn) \
+        + lora.conv_lora_apply(x, ad["b"], ad["a"], cfg.scale, (2, 2),
+                               "SAME")
+    pm = lora.conv_merge(p, ad["b"], ad["a"], cfg.scale)
+    y2 = jax.lax.conv_general_dilated(x, pm, (2, 2), "SAME",
+                                      dimension_numbers=dn)
+    np.testing.assert_allclose(np.asarray(y1), np.asarray(y2),
+                               rtol=1e-4, atol=1e-4)
+
+
+@pytest.mark.parametrize("mode", ["lora", "dense", "frozen"])
+def test_linear_modes(mode):
+    cfg = LoRAConfig(rank=4, alpha=64)
+    fz, tr = lora.linear_init(jax.random.PRNGKey(0), 16, 24, mode, cfg)
+    x = jax.random.normal(jax.random.PRNGKey(1), (3, 16))
+    y = lora.linear_apply(fz, tr, x, cfg.scale, jnp.float32)
+    assert y.shape == (3, 24)
+    if mode == "lora":
+        assert "w" in fz and "a" in tr and "b" in tr
+    elif mode == "dense":
+        assert not fz and "w" in tr
+    else:
+        assert "w" in fz and not tr
+
+
+def test_int8_frozen_base_close_and_smaller():
+    """Beyond-paper: symmetric int8 frozen base ~= bf16 base."""
+    import jax.numpy as jnp
+    from repro.core.lora import quantize_frozen_tree, frozen_weight
+    from repro.utils.tree import tree_bytes
+    k = jax.random.PRNGKey(0)
+    w = (jax.random.normal(k, (3, 32, 48)) * 0.3).astype(jnp.bfloat16)
+    fz = {"w": w}
+    fq = quantize_frozen_tree(fz)
+    assert fq["w_q8"].dtype == jnp.int8
+    assert fq["w_s"].shape == (3, 48)
+    deq = frozen_weight(fq, jnp.float32)
+    err = float(jnp.max(jnp.abs(deq - w.astype(jnp.float32))))
+    scale = float(jnp.max(jnp.abs(w.astype(jnp.float32))))
+    assert err < scale / 64          # < 2 int8 steps
+    assert tree_bytes(fq) < tree_bytes(fz) * 0.6

@@ -1,0 +1,111 @@
+"""Message codec + aggregation semantics (the FL round math)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import aggregation, flocora, messages
+from repro.core.flocora import FLoCoRAConfig
+from repro.core.quant import QuantConfig
+
+
+def _tree(key, scale=1.0):
+    ks = jax.random.split(key, 3)
+    return {"a": jax.random.normal(ks[0], (6, 8)) * scale,
+            "b": jax.random.normal(ks[1], (4, 3, 5)) * scale,
+            "norm": jax.random.normal(ks[2], (7,)) * scale}
+
+
+def test_codec_roundtrip_shapes_and_error():
+    t = _tree(jax.random.PRNGKey(0), 2.0)
+    for bits in (2, 4, 8):
+        rt = messages.roundtrip(t, QuantConfig(bits=bits))
+        assert jax.tree.all(jax.tree.map(
+            lambda a, b: a.shape == b.shape, t, rt))
+        # 1-D leaves pass through exactly (norms not quantized)
+        np.testing.assert_array_equal(np.asarray(rt["norm"]),
+                                      np.asarray(t["norm"]))
+        err = float(jnp.max(jnp.abs(rt["a"] - t["a"])))
+        assert err < 8.0 / ((1 << bits) - 1)
+
+
+def test_fedavg_weighted_mean():
+    trees = [_tree(jax.random.PRNGKey(i)) for i in range(4)]
+    w = jnp.asarray([1.0, 2.0, 3.0, 4.0])
+    stacked = aggregation.stack_trees(trees)
+    agg = aggregation.fedavg(stacked, w)
+    manual = sum((wi / 10.0) * t["a"] for wi, t in zip([1, 2, 3, 4], trees))
+    np.testing.assert_allclose(np.asarray(agg["a"]), np.asarray(manual),
+                               rtol=1e-5, atol=1e-6)
+
+
+def test_server_round_quantized_close_to_fp():
+    trees = [_tree(jax.random.PRNGKey(i)) for i in range(5)]
+    w = jnp.ones(5)
+    stacked = aggregation.stack_trees(trees)
+    fp = aggregation.fedavg(stacked, w)
+    q8 = flocora.server_round(stacked, w, FLoCoRAConfig(quant_bits=8))
+    err = float(jnp.max(jnp.abs(fp["a"] - q8["a"])))
+    assert 0 < err < 0.05
+
+
+def test_error_feedback_reduces_bias():
+    """EF: time-averaged quantization error decays vs plain RTN."""
+    cfg = QuantConfig(bits=2)
+    x = {"w": jax.random.normal(jax.random.PRNGKey(0), (4, 64)) * 0.7}
+    res = aggregation.ef_init(x)
+    recon_sum_ef = jnp.zeros_like(x["w"])
+    recon_sum_rtn = jnp.zeros_like(x["w"])
+    n = 24
+    for _ in range(n):
+        recon, res = aggregation.ef_encode(x, res, cfg)
+        recon_sum_ef += recon["w"]
+        recon_sum_rtn += messages.roundtrip(x, cfg)["w"]
+    bias_ef = float(jnp.mean(jnp.abs(recon_sum_ef / n - x["w"])))
+    bias_rtn = float(jnp.mean(jnp.abs(recon_sum_rtn / n - x["w"])))
+    assert bias_ef < bias_rtn * 0.7 or bias_ef < 1e-3
+
+
+def test_fedbuff_staleness_weighting():
+    like = {"w": jnp.zeros((2, 2))}
+    st_ = aggregation.fedbuff_init(like)
+    u1 = {"w": jnp.ones((2, 2))}
+    u2 = {"w": 3 * jnp.ones((2, 2))}
+    st_ = aggregation.fedbuff_add(st_, u1, jnp.asarray(1.0),
+                                  jnp.asarray(0.0), half_life=1.0)
+    st_ = aggregation.fedbuff_add(st_, u2, jnp.asarray(1.0),
+                                  jnp.asarray(1.0), half_life=1.0)
+    agg, st2 = aggregation.fedbuff_flush(st_, like)
+    # weights 1 and 0.5 -> (1*1 + 0.5*3) / 1.5 = 5/3
+    np.testing.assert_allclose(np.asarray(agg["w"]),
+                               np.full((2, 2), 5 / 3), rtol=1e-5)
+    assert int(st2.count) == 0
+
+
+@settings(max_examples=25, deadline=None)
+@given(bits=st.sampled_from([4, 8]), k=st.integers(2, 6),
+       seed=st.integers(0, 2**31 - 1))
+def test_property_quantized_fedavg_error_bounded(bits, k, seed):
+    """Aggregated quantization error <= max client scale/2 (convexity)."""
+    keys = jax.random.split(jax.random.PRNGKey(seed), k)
+    trees = [{"w": jax.random.normal(kk, (3, 32))} for kk in keys]
+    w = jnp.ones(k)
+    stacked = aggregation.stack_trees(trees)
+    fp = aggregation.fedavg(stacked, w)
+    q = aggregation.fedavg_quantized(stacked, w, QuantConfig(bits=bits))
+    err = float(jnp.max(jnp.abs(fp["w"] - q["w"])))
+    from repro.core.quant import affine_qparams
+    smax = max(float(jnp.max(affine_qparams(t["w"], bits, 1)[0]))
+               for t in trees)
+    assert err <= smax / 2 + 1e-5
+
+
+def test_wire_bytes_accounting_manual():
+    t = {"m": jnp.zeros((10, 6)), "v": jnp.zeros((5,))}
+    # int8: 60 payload + 6 ch * 8 sidecar + 5*4 fp = 60+48+20 = 128
+    assert messages.message_wire_bytes(t, QuantConfig(bits=8)) == 128
+    # int4: ceil(60/2)=30 + 48 + 20 = 98
+    assert messages.message_wire_bytes(t, QuantConfig(bits=4)) == 98
+    # fp: (60+5)*4 = 260
+    assert messages.message_wire_bytes(t, QuantConfig()) == 260

@@ -1,0 +1,101 @@
+"""Optimizer math + data pipeline invariants."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.data import SyntheticVision, lda_partition, markov_lm_batch
+from repro.optim import adamw, clip_by_global_norm, sgd
+from repro.optim.schedule import cosine_warmup
+
+
+def test_sgd_momentum_matches_manual():
+    opt = sgd(momentum=0.9)
+    p = {"w": jnp.asarray([1.0, 2.0])}
+    g = {"w": jnp.asarray([0.5, -1.0])}
+    s = opt.init(p)
+    p1, s1 = opt.update(g, s, p, 0.1)
+    np.testing.assert_allclose(np.asarray(p1["w"]),
+                               [1.0 - 0.05, 2.0 + 0.1], rtol=1e-6)
+    p2, _ = opt.update(g, s1, p1, 0.1)
+    # mu2 = 0.9*0.5 + 0.5 = 0.95 ; w = 0.95 - 0.1*0.95
+    np.testing.assert_allclose(np.asarray(p2["w"])[0],
+                               0.95 - 0.1 * 0.95, rtol=1e-6)
+
+
+def test_adamw_first_step_is_lr_signed():
+    opt = adamw(b1=0.9, b2=0.999, eps=1e-12)
+    p = {"w": jnp.zeros(3)}
+    g = {"w": jnp.asarray([1.0, -2.0, 0.5])}
+    s = opt.init(p)
+    p1, _ = opt.update(g, s, p, 0.01)
+    np.testing.assert_allclose(np.asarray(p1["w"]),
+                               [-0.01, 0.01, -0.01], atol=1e-6)
+
+
+def test_clip_global_norm():
+    g = {"a": jnp.full(4, 3.0), "b": jnp.full(9, 2.0)}
+    clipped, gn = clip_by_global_norm(g, 1.0)
+    total = np.sqrt(sum(float(jnp.sum(x ** 2))
+                        for x in jax.tree.leaves(clipped)))
+    assert abs(total - 1.0) < 1e-5
+    assert float(gn) > 1.0
+
+
+def test_cosine_schedule_endpoints():
+    f = cosine_warmup(1.0, warmup=10, total=110, floor=0.1)
+    assert float(f(0)) == 0.0
+    assert abs(float(f(10)) - 1.0) < 1e-6
+    assert abs(float(f(110)) - 0.1) < 1e-6
+
+
+@settings(max_examples=20, deadline=None)
+@given(alpha=st.floats(0.1, 10.0), n_clients=st.integers(2, 30),
+       seed=st.integers(0, 1000))
+def test_property_lda_partition_covers_all(alpha, n_clients, seed):
+    rng = np.random.default_rng(seed)
+    labels = rng.integers(0, 10, 500)
+    parts = lda_partition(labels, n_clients, alpha, seed=seed)
+    allidx = np.concatenate(parts)
+    assert len(allidx) == 500
+    assert len(np.unique(allidx)) == 500          # exact cover, no dupes
+    assert min(len(p) for p in parts) >= 2
+
+
+def test_lda_skew_increases_as_alpha_drops():
+    rng = np.random.default_rng(0)
+    labels = rng.integers(0, 10, 2000)
+
+    def skew(alpha):
+        parts = lda_partition(labels, 10, alpha, seed=1)
+        stds = []
+        for p in parts:
+            hist = np.bincount(labels[p], minlength=10) / len(p)
+            stds.append(hist.std())
+        return np.mean(stds)
+
+    assert skew(0.1) > skew(100.0)
+
+
+def test_markov_lm_is_learnable_structure():
+    rng = np.random.default_rng(0)
+    b = markov_lm_batch(rng, vocab=64, batch=16, seq=32, seed=0)
+    assert b["tokens"].shape == (16, 33)
+    # next-token entropy is far below uniform: count distinct successors
+    nxt, w = None, None
+    from repro.data.synthetic import _markov_tables
+    nxt, w = _markov_tables(64, 0)
+    assert nxt.shape[1] == 8                       # sparse support
+
+
+def test_synthetic_vision_classes_separable():
+    sv = SyntheticVision(seed=0)
+    rng = np.random.default_rng(0)
+    y = np.arange(10).repeat(8)
+    x = sv.sample(rng, y)
+    # nearest-template classification should beat chance by a wide margin
+    # (shift+noise keeps it below ceiling; a CNN learns invariances on top)
+    t = sv.templates.reshape(10, -1)
+    d = ((x.reshape(len(y), -1)[:, None] - t[None]) ** 2).sum(-1)
+    acc = (d.argmin(1) == y).mean()
+    assert acc > 0.6, acc

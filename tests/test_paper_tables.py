@@ -1,0 +1,92 @@
+"""Byte-exact reproduction of the paper's count/size tables.
+
+Table I  — ResNet-8 trained/total params for r in {8,16,32,64,128}
+Table III — ResNet-8 TCC for FP / int8 / int4 / int2 (R=100)
+Table IV — ResNet-18 message sizes (r in {16,32,64}, FP & Q8) and
+           FedAvg baseline 44.7 MB / 62.6 GB (R=700)
+"""
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.core import messages
+from repro.core.lora import LoRAConfig
+from repro.core.quant import QuantConfig
+from repro.models.resnet import ResNetConfig, init as rinit
+from repro.utils.tree import tree_size
+
+K = jax.random.PRNGKey(0)
+
+
+# ---- Table I -------------------------------------------------------------
+
+@pytest.mark.parametrize("rank,trained,total", [
+    (8, 69_450, 1_290_058),
+    (16, 131_914, 1_352_522),
+    (32, 256_842, 1_477_450),
+    (64, 506_698, 1_727_306),
+    (128, 1_006_410, 2_227_018),
+])
+def test_table1_param_counts(rank, trained, total):
+    cfg = ResNetConfig(arch="resnet8",
+                       lora=LoRAConfig(rank=rank, alpha=16.0 * rank))
+    p = rinit(K, cfg)
+    assert tree_size(p["train"]) == trained
+    assert tree_size(p["train"]) + tree_size(p["frozen"]) == total
+
+
+def test_fedavg_resnet8_params():
+    p = rinit(K, ResNetConfig(arch="resnet8", mode="fedavg"))
+    assert tree_size(p["train"]) == 1_227_594          # paper: 1.23M
+
+
+# ---- Table III (TCC, MB = 1e6 bytes, R = 100) ------------------------------
+
+def _tcc_mb(train_tree, bits, rounds=100):
+    b = messages.tcc_bytes(train_tree, QuantConfig(bits=bits), rounds)
+    return b / 1e6
+
+
+def test_table3_tcc():
+    fedavg = rinit(K, ResNetConfig(arch="resnet8", mode="fedavg"))
+    assert abs(_tcc_mb(fedavg["train"], None) - 982.07) < 0.02
+
+    flo = rinit(K, ResNetConfig(arch="resnet8",
+                                lora=LoRAConfig(rank=32, alpha=512.0)))
+    assert abs(_tcc_mb(flo["train"], None) - 205.47) < 0.02
+    assert abs(_tcc_mb(flo["train"], 8) - 55.56) < 0.02
+    assert abs(_tcc_mb(flo["train"], 4) - 30.15) < 0.03
+    assert abs(_tcc_mb(flo["train"], 2) - 17.44) < 0.03
+
+
+# ---- Table IV (ResNet-18, message sizes in MB, R = 700) --------------------
+
+def test_table4_fedavg_baseline():
+    p = rinit(K, ResNetConfig(arch="resnet18", mode="fedavg"))
+    assert tree_size(p["train"]) == 11_173_962
+    msg_mb = messages.message_wire_bytes(p["train"], QuantConfig()) / 1e6
+    assert abs(msg_mb - 44.7) < 0.05                    # paper: 44.7 MB
+    tcc_gb = messages.tcc_bytes(p["train"], QuantConfig(), 700) / 1e9
+    assert abs(tcc_gb - 62.6) < 0.1                     # paper: 62.6 GB
+
+
+@pytest.mark.parametrize("rank,fp_mb,q8_mb", [
+    (64, 9.2, 2.4), (32, 4.6, 1.2), (16, 2.4, 0.7),
+])
+def test_table4_flocora_rows(rank, fp_mb, q8_mb):
+    p = rinit(K, ResNetConfig(arch="resnet18",
+                              lora=LoRAConfig(rank=rank, alpha=16.0 * rank)))
+    fp = messages.message_wire_bytes(p["train"], QuantConfig()) / 1e6
+    q8 = messages.message_wire_bytes(p["train"], QuantConfig(bits=8)) / 1e6
+    assert abs(fp - fp_mb) < 0.06, fp
+    assert abs(q8 - q8_mb) < 0.06, q8
+
+
+def test_table2_vanilla_counts():
+    """Table II: FLoCoRA Vanilla (stem+FC adapted, norms frozen) ~0.26M."""
+    cfg = ResNetConfig(arch="resnet8", stem_mode="lora", fc_mode="lora",
+                       norms_trained=False,
+                       lora=LoRAConfig(rank=32, alpha=512.0))
+    p = rinit(K, cfg)
+    n = tree_size(p["train"])
+    assert n == 261_280                                  # 0.26 M

@@ -1,0 +1,83 @@
+"""Unit + property tests for the affine quantization core."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import quant
+from repro.core.quant import QuantConfig
+
+
+@pytest.mark.parametrize("bits", [2, 4, 8])
+def test_roundtrip_error_bound(bits):
+    """RTN error is bounded by scale/2 per channel."""
+    x = jax.random.normal(jax.random.PRNGKey(0), (16, 64)) * 3
+    s, z = quant.affine_qparams(x, bits, channel_axis=0)
+    q = quant.quantize(x, s, z, bits, channel_axis=0)
+    xd = quant.dequantize(q, s, z, channel_axis=0)
+    err = jnp.max(jnp.abs(x - xd), axis=1)
+    assert bool(jnp.all(err <= s / 2 + 1e-6))
+
+
+@pytest.mark.parametrize("bits", [2, 4, 8])
+def test_pack_unpack_exact(bits):
+    rng = np.random.default_rng(0)
+    q = jnp.asarray(rng.integers(0, 1 << bits, size=937), jnp.uint8)
+    p = quant.pack_levels(q, bits)
+    assert p.size == -(-937 * bits // 8)
+    u = quant.unpack_levels(p, bits, 937)
+    np.testing.assert_array_equal(np.asarray(u), np.asarray(q))
+
+
+def test_constant_channel_exact():
+    """Degenerate channels (max == min) reconstruct exactly."""
+    x = jnp.full((4, 32), 1.7)
+    xd = quant.quant_dequant(x, QuantConfig(bits=4, channel_axis=0))
+    # 0 must be representable; constant 1.7 quantizes to scale=1.7/qmax
+    assert bool(jnp.all(jnp.abs(xd - x) <= 1.7 / 15 / 2 + 1e-6))
+
+
+def test_zero_preserved():
+    """Affine quantization represents 0 exactly (zero-point convention)."""
+    x = jnp.asarray([[0.0, 1.0, 5.0, -3.0] * 8])
+    xd = quant.quant_dequant(x, QuantConfig(bits=8, channel_axis=0))
+    assert abs(float(xd[0, 0])) < 1e-6
+
+
+@settings(max_examples=50, deadline=None)
+@given(
+    bits=st.sampled_from([2, 4, 8]),
+    rows=st.integers(1, 9),
+    cols=st.integers(2, 65),
+    scale=st.floats(1e-3, 1e3),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_property_quant_bound_and_monotonic(bits, rows, cols, scale, seed):
+    """Property: (1) error bounded by scale/2; (2) dequant preserves
+    channel-wise ordering up to one quantization step."""
+    rng = np.random.default_rng(seed)
+    x = jnp.asarray(rng.normal(size=(rows, cols)) * scale, jnp.float32)
+    s, z = quant.affine_qparams(x, bits, channel_axis=0)
+    q = quant.quantize(x, s, z, bits, channel_axis=0)
+    xd = quant.dequantize(q, s, z, channel_axis=0)
+    err = np.asarray(jnp.abs(x - xd))
+    bound = np.asarray(s)[:, None] / 2 + 1e-4 * scale
+    assert (err <= bound).all()
+
+
+@settings(max_examples=30, deadline=None)
+@given(bits=st.sampled_from([2, 4, 8]), n=st.integers(1, 300),
+       seed=st.integers(0, 2**31 - 1))
+def test_property_pack_roundtrip(bits, n, seed):
+    rng = np.random.default_rng(seed)
+    q = jnp.asarray(rng.integers(0, 1 << bits, size=n), jnp.uint8)
+    u = quant.unpack_levels(quant.pack_levels(q, bits), bits, n)
+    np.testing.assert_array_equal(np.asarray(u), np.asarray(q))
+
+
+def test_symmetric_mode():
+    x = jax.random.normal(jax.random.PRNGKey(1), (8, 64))
+    xd = quant.quant_dequant(x, QuantConfig(bits=8, channel_axis=0,
+                                            symmetric=True))
+    assert float(jnp.max(jnp.abs(x - xd))) < 0.1
