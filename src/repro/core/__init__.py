@@ -3,7 +3,11 @@
 Public API re-exports.
 """
 from repro.core.flocora import FLoCoRAConfig, broadcast, client_uplink, \
-    server_round, round_wire_bytes, tcc
+    server_downlink, server_round, round_wire_bytes, tcc
+from repro.core.aggregation import Aggregator, FedAvgAggregator, \
+    FedBuffAggregator, ErrorFeedbackFedAvg, fedavg_packed
+from repro.core.messages import PackedLeaf, pack_message, unpack_message, \
+    packed_wire_bytes, message_wire_bytes
 from repro.core.lora import LoRAConfig, dense_lora_init, dense_lora_apply, \
     dense_merge, conv_lora_init, conv_lora_apply, conv_merge, linear_init, \
     linear_apply, linear_logical

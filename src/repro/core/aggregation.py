@@ -5,29 +5,34 @@ parameter trees*, so any parameter-averaging FL rule applies unchanged.
 Implemented here:
 
   * ``fedavg``      — n_k/n weighted mean (paper's showcase, Eq. 1);
-  * ``fedavg_quantized`` — the paper's full pipeline: each client message
-    is quantize->dequantize'd before the weighted mean (server sees RTN
-    reconstructions); server->client broadcast is quantized again by the
-    caller via ``messages.roundtrip``;
+  * ``fedavg_quantized`` — the fp reference for the paper's pipeline: each
+    client message is quantize->dequantize'd before the weighted mean;
+  * ``fedavg_packed`` — the wire-true path: K PACKED client messages
+    (uint32 payloads + sidecars) are unpacked, dequantized and reduced in
+    one pass on the fused ``dequant_agg`` Pallas kernel — the K dequantized
+    fp32 client trees are never materialized;
   * ``fedbuff``     — beyond-paper async buffered aggregation with
     staleness discounting (Nguyen et al. '22 style);
   * ``ErrorFeedback`` — beyond-paper EF residual compensation making the
     quantizer unbiased-in-time (EF21-style memory).
 
-All functions operate on stacked client trees: every leaf carries a
-leading K (clients) dim, so the whole aggregation jits into a single
-fused reduce (see kernels/agg for the Pallas version).
+The :class:`Aggregator` strategy protocol wraps these for the FL engine:
+``FedAvgAggregator`` / ``FedBuffAggregator`` / ``ErrorFeedbackFedAvg`` all
+consume a list of client messages (packed or fp trees), so ``FLServer``
+is generic over the aggregation rule.
 """
 from __future__ import annotations
 
 import dataclasses
-from typing import Any
+from typing import Any, Protocol, runtime_checkable
 
 import jax
 import jax.numpy as jnp
 
 from repro.core import messages
+from repro.core.messages import is_packed_leaf
 from repro.core.quant import QuantConfig
+from repro.kernels import ops as kops
 
 Array = jax.Array
 
@@ -56,6 +61,42 @@ def fedavg_quantized(stacked: Any, weights: Array, qcfg: QuantConfig) -> Any:
     if qcfg.enabled:
         stacked = jax.vmap(lambda t: messages.roundtrip(t, qcfg))(stacked)
     return fedavg(stacked, weights)
+
+
+def fedavg_packed(msgs: list[Any], weights: Array) -> Any:
+    """Weighted mean over K PACKED wire messages, fused.
+
+    Per quantized leaf, the K (C, Nw) uint32 payloads are stacked and fed
+    to the ``dequant_agg`` Pallas kernel with normalized weights: unpack +
+    dequant + reduce happen in one VMEM pass, never materializing the K
+    fp32 client trees. Unquantized (fp passthrough) leaves take the plain
+    weighted mean. Numerically equal (fp32 tolerance) to
+    ``fedavg_quantized`` on the same client trees.
+    """
+    w = weights / jnp.sum(weights)
+
+    def agg(*leaves):
+        if is_packed_leaf(leaves[0]):
+            l0 = leaves[0]
+            out = kops.dequant_agg(
+                jnp.stack([m.payload for m in leaves]),
+                jnp.stack([m.scale for m in leaves]),
+                jnp.stack([m.zp for m in leaves]),
+                w.astype(jnp.float32), l0.bits)          # (C, N_pad)
+            x2d = out[:, : l0.n_per_channel]
+            return messages._from_channel_2d(
+                x2d, l0.shape, l0.per_stack).astype(l0.dtype)
+        x = jnp.stack([m.astype(jnp.float32) for m in leaves])
+        wr = w.reshape((-1,) + (1,) * (x.ndim - 1)).astype(jnp.float32)
+        return jnp.sum(x * wr, axis=0).astype(leaves[0].dtype)
+
+    return jax.tree.map(agg, *msgs, is_leaf=is_packed_leaf)
+
+
+def message_is_packed(msg: Any) -> bool:
+    """True if any leaf of `msg` is a PackedLeaf (wire-form message)."""
+    return any(is_packed_leaf(l) for l in
+               jax.tree.leaves(msg, is_leaf=is_packed_leaf))
 
 
 # ---------------------------------------------------------------------------
@@ -118,3 +159,103 @@ def ef_encode(tree: Any, residual: Any, qcfg: QuantConfig
                            comp, recon)
     recon = jax.tree.map(lambda r, x: r.astype(x.dtype), recon, tree)
     return recon, new_res
+
+
+def ef_encode_packed(tree: Any, residual: Any, qcfg: QuantConfig
+                     ) -> tuple[Any, Any]:
+    """Wire-true EF uplink: pack Q(x + e), keep e' = (x + e) - deq(msg).
+
+    Returns (packed wire message, new_residual) — the client computes its
+    residual from the same packed payload the server will dequantize, so
+    compensation is exact w.r.t. the wire format."""
+    if not qcfg.enabled:
+        return tree, residual
+    comp = jax.tree.map(lambda x, e: x.astype(jnp.float32) + e,
+                        tree, residual)
+    msg = messages.pack_message(comp, qcfg)
+    recon = messages.unpack_message(msg)
+    new_res = jax.tree.map(lambda c, r: c - r.astype(jnp.float32),
+                           comp, recon)
+
+    # the wire message must advertise the ORIGINAL adapter dtypes (comp is
+    # fp32), or the aggregated global tree silently promotes to fp32
+    def redtype(m, x):
+        if is_packed_leaf(m):
+            return dataclasses.replace(m, dtype=x.dtype)
+        return m.astype(x.dtype)
+
+    msg = jax.tree.map(redtype, msg, tree, is_leaf=is_packed_leaf)
+    return msg, new_res
+
+
+# ---------------------------------------------------------------------------
+# Aggregator strategy protocol (paper §III: FLoCoRA is aggregation-agnostic)
+# ---------------------------------------------------------------------------
+
+@runtime_checkable
+class Aggregator(Protocol):
+    """Server-side aggregation rule over one round's client messages.
+
+    ``msgs`` is a list of K client messages — either packed wire messages
+    (PackedLeaf trees, the production path) or raw fp trees (the
+    simulation path); ``weights`` are the n_k sample counts."""
+
+    def aggregate(self, msgs: list[Any], weights: Array) -> Any:
+        ...
+
+
+@dataclasses.dataclass
+class FedAvgAggregator:
+    """Paper Eq. 1. Packed inputs lower onto the fused dequant_agg kernel
+    (after a bit-width sanity check against ``qcfg``); fp inputs reproduce
+    ``fedavg`` over the stacked trees."""
+    qcfg: QuantConfig = dataclasses.field(default_factory=QuantConfig)
+
+    def aggregate(self, msgs: list[Any], weights: Array) -> Any:
+        if message_is_packed(msgs[0]):
+            if self.qcfg.enabled:
+                for leaf in jax.tree.leaves(msgs[0],
+                                            is_leaf=is_packed_leaf):
+                    if is_packed_leaf(leaf) and leaf.bits != self.qcfg.bits:
+                        raise ValueError(
+                            f"aggregator configured for {self.qcfg.bits}-"
+                            f"bit messages, got {leaf.bits}-bit payload")
+            return fedavg_packed(msgs, weights)
+        return fedavg(stack_trees(msgs), weights)
+
+
+@dataclasses.dataclass
+class FedBuffAggregator:
+    """Buffered aggregation with staleness discounting. In the sync round
+    the straggler arrival rank plays the staleness role; ``add``/``flush``
+    expose the async interface directly."""
+    half_life: float = 4.0
+    rank_staleness: bool = False   # sync rounds: discount late arrivals
+
+    def aggregate(self, msgs: list[Any], weights: Array) -> Any:
+        trees = [messages.unpack_message(m) if message_is_packed(m) else m
+                 for m in msgs]
+        state = fedbuff_init(trees[0])
+        for rank, (tree, w) in enumerate(zip(trees, weights)):
+            stale = jnp.asarray(float(rank) if self.rank_staleness else 0.0)
+            state = fedbuff_add(state, tree, w, stale,
+                                half_life=self.half_life)
+        agg, _ = fedbuff_flush(state, trees[0])
+        return agg
+
+
+@dataclasses.dataclass
+class ErrorFeedbackFedAvg(FedAvgAggregator):
+    """EF-compensated FedAvg: owns the per-client residual memory; the
+    uplink encode routes through ``ef_encode_packed`` so each client sends
+    Q(x + e) and the quantizer becomes unbiased-in-time."""
+    residuals: dict = dataclasses.field(default_factory=dict)
+
+    def residual(self, cid: int, like: Any) -> Any:
+        res = self.residuals.get(int(cid))
+        return ef_init(like) if res is None else res
+
+    def store_residual(self, cid: int, res: Any) -> None:
+        # host numpy: one fp32 adapter tree per client ever sampled must
+        # not accumulate in accelerator memory
+        self.residuals[int(cid)] = jax.device_get(res)

@@ -42,22 +42,36 @@ class FLoCoRAConfig:
         return self.alpha / self.rank
 
 
+def server_downlink(global_trainable: Any, cfg: FLoCoRAConfig) -> Any:
+    """Step (1), wire form: the packed message the server broadcasts
+    (uint32 payloads + fp32 sidecars; fp tree when quantization is off)."""
+    if not cfg.qcfg.enabled:
+        return global_trainable
+    return messages.pack_message(global_trainable, cfg.qcfg)
+
+
 def broadcast(global_trainable: Any, cfg: FLoCoRAConfig) -> Any:
     """Step (1): what clients reconstruct from the server message."""
-    return messages.roundtrip(global_trainable, cfg.qcfg)
+    return messages.unpack_message(server_downlink(global_trainable, cfg))
 
 
 def client_uplink(trainable: Any, cfg: FLoCoRAConfig,
                   ef_residual: Optional[Any] = None
                   ) -> tuple[Any, Optional[Any]]:
-    """Step (3): what the server reconstructs from one client's message.
+    """Step (3): one client's WIRE message (packed payloads when
+    quantization is on; the raw fp tree otherwise).
 
     With error feedback enabled, the client compensates its own previous
-    quantization error (beyond-paper option)."""
+    quantization error (beyond-paper option); pass the stored residual
+    (``None`` initializes a zero residual). Returns (message, residual)."""
     if cfg.error_feedback and cfg.qcfg.enabled:
-        assert ef_residual is not None
-        return aggregation.ef_encode(trainable, ef_residual, cfg.qcfg)
-    return messages.roundtrip(trainable, cfg.qcfg), ef_residual
+        if ef_residual is None:
+            ef_residual = aggregation.ef_init(trainable)
+        return aggregation.ef_encode_packed(trainable, ef_residual,
+                                            cfg.qcfg)
+    if not cfg.qcfg.enabled:
+        return trainable, ef_residual
+    return messages.pack_message(trainable, cfg.qcfg), ef_residual
 
 
 def server_round(stacked_client_trainables: Any, weights: Array,

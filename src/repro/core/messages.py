@@ -9,8 +9,17 @@ Quantization rules (paper §IV, validated byte-exact against Tables III/IV):
     travel in fp32 — the paper's "normalization layers are not quantized";
   * scale and zero-point travel as fp32 sidecars (2 * 4 bytes / channel).
 
-``encode``/``decode`` are jit-friendly; ``wire_bytes`` is the static
-accounting used by the TCC benchmarks.
+Two codecs share the quantization math:
+
+  * ``encode``/``decode``: the fp-simulation view (unpacked uint8 levels)
+    used as the numerical reference oracle;
+  * ``pack_message``/``unpack_message``: the WIRE-TRUE view — each
+    quantized leaf becomes a :class:`PackedLeaf` holding uint32-word
+    payloads (the Pallas ``quant_pack`` layout) + fp32 sidecars, and
+    serializes to exactly ``message_wire_bytes`` bytes via ``to_wire``.
+
+``wire_bytes`` is the static accounting used by the TCC benchmarks; the
+packed codec is validated against it buffer-for-buffer (tier-1 tests).
 """
 from __future__ import annotations
 
@@ -23,6 +32,8 @@ import numpy as np
 
 from repro.core import quant
 from repro.core.quant import QuantConfig
+from repro.kernels import ops as kops
+from repro.kernels import ref as kref
 
 Array = jax.Array
 
@@ -126,3 +137,194 @@ def message_wire_bytes(tree: Any, cfg: QuantConfig) -> int:
 def tcc_bytes(tree: Any, cfg: QuantConfig, rounds: int) -> int:
     """Paper Eq. 2 generalized: 2 * R * message_bytes."""
     return 2 * rounds * message_wire_bytes(tree, cfg)
+
+
+# ---------------------------------------------------------------------------
+# Packed wire codec (real uint32 payloads, not fp simulation)
+# ---------------------------------------------------------------------------
+
+@jax.tree_util.register_pytree_node_class
+@dataclasses.dataclass
+class PackedLeaf:
+    """One quantized tensor in wire form.
+
+    ``payload`` uses the Pallas kernel layout: one row of little-endian
+    uint32 words per channel, columns padded to the kernel lane multiple
+    (32/bits * 128 levels). The valid levels are the first
+    ``n_per_channel`` of each row; ``to_wire`` strips the padding so the
+    serialized payload is exactly ``ceil(numel * bits / 8)`` bytes.
+    """
+    payload: Array        # (channels, Nw) uint32 words
+    scale: Array          # (channels,) fp32 sidecar
+    zp: Array             # (channels,) fp32 sidecar
+    shape: tuple          # static: original tensor shape
+    dtype: Any            # static: original dtype
+    bits: int             # static
+    per_stack: bool = False   # static: per-(stack, channel) qparams
+
+    def tree_flatten(self):
+        return ((self.payload, self.scale, self.zp),
+                (self.shape, self.dtype, self.bits, self.per_stack))
+
+    @classmethod
+    def tree_unflatten(cls, aux, children):
+        return cls(*children, *aux)
+
+    @property
+    def channels(self) -> int:
+        if self.per_stack and len(self.shape) >= 3:
+            return int(np.prod(self.shape[:-2])) * self.shape[-1]
+        return self.shape[-1]
+
+    @property
+    def n_per_channel(self) -> int:
+        return int(np.prod(self.shape)) // self.channels
+
+    # -- serialization (the actual bytes on the wire) -----------------------
+    def to_wire(self) -> dict[str, np.ndarray]:
+        """Host-side buffers as sent: exact payload bytes + fp32 sidecars.
+
+        The payload re-packs the valid levels of every channel contiguously
+        (no lane/word padding), so ``sum(buf.nbytes) == leaf_wire_bytes``.
+        """
+        lv = kref.unpack_words(self.payload, self.bits)[:, :self.n_per_channel]
+        payload_u8 = np.asarray(
+            quant.pack_levels(lv.reshape(-1).astype(jnp.uint8), self.bits))
+        return {"payload": payload_u8,
+                "scale": np.asarray(self.scale, np.float32),
+                "zp": np.asarray(self.zp, np.float32)}
+
+    @classmethod
+    def from_wire(cls, buffers: dict, shape: tuple, dtype, bits: int,
+                  per_stack: bool = False) -> "PackedLeaf":
+        """Rebuild the kernel-layout leaf from serialized wire buffers."""
+        leaf = cls(None, jnp.asarray(buffers["scale"]),
+                   jnp.asarray(buffers["zp"]), tuple(shape), dtype, bits,
+                   per_stack)
+        n = int(np.prod(shape))
+        lv = quant.unpack_levels(jnp.asarray(buffers["payload"]), bits, n)
+        lv = lv.reshape(leaf.channels, leaf.n_per_channel)
+        leaf.payload = _pack_rows(lv, bits)
+        return leaf
+
+    def wire_bytes(self) -> int:
+        """Real serialized size (measured from the buffers)."""
+        bufs = self.to_wire()
+        return sum(b.nbytes for b in bufs.values())
+
+
+def _lane(bits: int) -> int:
+    """Kernel column alignment: 32/bits levels per word * 128 lanes."""
+    return (32 // bits) * 128
+
+
+def _pack_rows(levels: Array, bits: int) -> Array:
+    """(C, n) uint8 levels -> (C, Nw) uint32 kernel-layout words."""
+    per = 32 // bits
+    pad = (-levels.shape[1]) % _lane(bits)
+    lv = jnp.pad(levels.astype(jnp.uint32), ((0, 0), (0, pad)))
+    return kref.pack_words(lv, bits)
+
+
+def _to_channel_2d(x: Array, per_stack: bool) -> Array:
+    """Channel-first 2D view matching the per-channel qparam groups."""
+    if per_stack and x.ndim >= 3:
+        s = int(np.prod(x.shape[:-2]))
+        x3 = jnp.swapaxes(x.reshape(s, x.shape[-2], x.shape[-1]), -1, -2)
+        return x3.reshape(s * x.shape[-1], x.shape[-2])
+    xm = jnp.moveaxis(x, -1, 0)
+    return xm.reshape(x.shape[-1], -1)
+
+
+def _from_channel_2d(x2d: Array, shape: tuple, per_stack: bool) -> Array:
+    if per_stack and len(shape) >= 3:
+        s = int(np.prod(shape[:-2]))
+        x3 = x2d.reshape(s, shape[-1], shape[-2])
+        return jnp.swapaxes(x3, -1, -2).reshape(shape)
+    x = x2d.reshape((shape[-1],) + tuple(shape[:-1]))
+    return jnp.moveaxis(x, 0, -1)
+
+
+def _pack_2d_jnp(x2d: Array, bits: int):
+    """Pure-jnp twin of ``kernels.ops.quant_pack``; vmap-safe, used where
+    a pallas_call can't be batched (e.g. per-pod packing under vmap).
+
+    Pads columns to WORD granularity only (ceil(n*bits/32) words/channel),
+    not the kernel's 128-lane multiple — a collective over this payload
+    carries ~exactly the wire bytes. Unpack/aggregate consumers slice to
+    ``n_per_channel``, so the two paddings interoperate."""
+    scale, zp = kref._qparams_rowwise(x2d.astype(jnp.float32), bits)
+    qmax = (1 << bits) - 1
+    q = jnp.clip(jnp.round(x2d.astype(jnp.float32) / scale[:, None])
+                 + zp[:, None], 0, qmax)
+    per = 32 // bits
+    qp = jnp.pad(q.astype(jnp.uint32),
+                 ((0, 0), (0, (-x2d.shape[1]) % per)))
+    return kref.pack_words(qp, bits), scale, zp
+
+
+def is_packed_leaf(t: Any) -> bool:
+    return isinstance(t, PackedLeaf)
+
+
+def pack_message(tree: Any, cfg: QuantConfig, *,
+                 use_kernel: bool = True) -> Any:
+    """Trainable tree -> wire message with real packed payloads.
+
+    Quantizable leaves become :class:`PackedLeaf` (uint32 words + fp32
+    sidecars via the fused Pallas ``quant_pack``); 1-D leaves pass through
+    in fp32. ``use_kernel=False`` selects the pure-jnp twin (identical
+    output; needed under vmap, e.g. the per-pod packing in launch).
+    """
+    if not cfg.enabled:
+        return tree
+
+    def pk(x):
+        if not quantizable(x):
+            return x
+        x2d = _to_channel_2d(x, cfg.per_stack)
+        if use_kernel:
+            payload, scale, zp = kops.quant_pack(x2d, cfg.bits)
+        else:
+            payload, scale, zp = _pack_2d_jnp(x2d, cfg.bits)
+        return PackedLeaf(payload, scale, zp, tuple(x.shape), x.dtype,
+                          cfg.bits, cfg.per_stack)
+
+    return jax.tree.map(pk, tree)
+
+
+def unpack_message(msg: Any) -> Any:
+    """Wire message -> fp tree (shape/dtype recorded in each leaf)."""
+
+    def up(t):
+        if not is_packed_leaf(t):
+            return t
+        lv = kref.unpack_words(t.payload, t.bits)[:, :t.n_per_channel]
+        x2d = (lv.astype(jnp.float32) - t.zp[:, None]) * t.scale[:, None]
+        return _from_channel_2d(x2d, t.shape, t.per_stack).astype(t.dtype)
+
+    return jax.tree.map(up, msg, is_leaf=is_packed_leaf)
+
+
+def message_to_wire(msg: Any) -> list[tuple[str, dict]]:
+    """Serialize a packed message to named host buffers (uplink form)."""
+    from repro.utils.tree import _path_str
+    flat, _ = jax.tree_util.tree_flatten_with_path(
+        msg, is_leaf=is_packed_leaf)
+    out = []
+    for path, leaf in flat:
+        if is_packed_leaf(leaf):
+            out.append((_path_str(path), leaf.to_wire()))
+        else:
+            out.append((_path_str(path),
+                        {"payload": np.asarray(leaf, np.float32)}))
+    return out
+
+
+def packed_wire_bytes(msg: Any) -> int:
+    """Bytes on the wire, MEASURED from the real serialized buffers (not
+    shape math) — the cross-check for ``message_wire_bytes``."""
+    total = 0
+    for _, bufs in message_to_wire(msg):
+        total += sum(b.nbytes for b in bufs.values())
+    return total

@@ -1,3 +1,4 @@
-from repro.fl.client import ClientConfig, make_local_trainer
+from repro.fl.client import ClientConfig, make_local_trainer, \
+    make_cohort_trainer, stack_local_batches, stack_cohort_batches
 from repro.fl.server import ServerConfig, FLServer
 from repro.fl.elastic import elastic_restore

@@ -7,14 +7,22 @@ Production-shaped features:
     synchronous FedAvg becomes deadline-robust;
   * CLIENT DROPOUT: a failed client (prob p_fail) contributes nothing;
     aggregation weights renormalize over survivors — a round never blocks;
-  * quantized broadcast + uplink per the paper (both directions, RTN) with
-    optional error feedback (beyond paper);
-  * atomic checkpoint/resume of (round, global adapters, sampler RNG,
-    EF residuals) — a restarted server continues the exact run;
+  * VMAPPED COHORT ENGINE: the surviving clients' local runs execute as
+    ONE jitted vmapped program over stacked batches, not a sequential
+    Python loop (see fl/client.py);
+  * WIRE-TRUE quantized exchange per the paper: broadcast and uplink
+    travel as PACKED messages (uint32 payloads + fp32 sidecars,
+    core/messages.py) and the server aggregates the packed payloads on
+    the fused dequant_agg kernel via a pluggable Aggregator strategy —
+    with optional error feedback (beyond paper);
+  * atomic checkpoint/resume of (round, global adapters, sampler RNG) —
+    a restarted server continues the exact run; the RNG bit-generator
+    state rides the JSON manifest directly;
   * TCC accounting per Eq. 2 (including the shared-once initial model).
 """
 from __future__ import annotations
 
+import ast
 import dataclasses
 from typing import Any, Callable, Optional
 
@@ -22,11 +30,13 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core import aggregation, flocora, messages
+from repro.core import flocora, messages
+from repro.core.aggregation import Aggregator, ErrorFeedbackFedAvg, \
+    FedAvgAggregator
 from repro.core.flocora import FLoCoRAConfig
 from repro.checkpoint import CheckpointManager
-from repro.fl.client import ClientConfig, make_local_trainer, \
-    stack_local_batches
+from repro.fl.client import ClientConfig, cohort_steps, \
+    make_cohort_trainer, stack_cohort_batches
 from repro.utils.tree import tree_bytes
 
 Array = jax.Array
@@ -50,13 +60,16 @@ class FLServer:
 
     model: dict with 'frozen'/'train' trees (train = FLoCoRA adapters);
     loss_fn(frozen, train, batch); client_data: list of per-client dict
-    datasets (numpy); eval_fn(frozen, train) -> metrics dict.
+    datasets (numpy); eval_fn(frozen, train) -> metrics dict;
+    aggregator: Aggregator strategy (defaults to FedAvg, or its
+    EF-compensated variant when fcfg.error_feedback is set).
     """
 
     def __init__(self, model: dict, loss_fn: Callable,
                  client_data: list[dict], scfg: ServerConfig,
                  ccfg: ClientConfig, fcfg: FLoCoRAConfig,
-                 eval_fn: Optional[Callable] = None):
+                 eval_fn: Optional[Callable] = None,
+                 aggregator: Optional[Aggregator] = None):
         self.frozen = model["frozen"]
         self.global_train = model["train"]
         self.loss_fn = loss_fn
@@ -66,22 +79,43 @@ class FLServer:
         self.rng = np.random.default_rng(scfg.seed)
         self.round = 0
         self.history: list[dict] = []
-        self.trainer = make_local_trainer(loss_fn, ccfg)
-        self.ef_residuals: dict[int, Any] = {}
+        self.trainer = make_cohort_trainer(loss_fn, ccfg)
+        # fixed schedule length across ALL clients: the cohort program's
+        # shape never changes between rounds (only distinct cohort sizes
+        # K retrace), and small clients are masked, not over-trained
+        self.cohort_schedule_steps = cohort_steps(client_data, ccfg)
+        ef_wanted = fcfg.error_feedback and fcfg.qcfg.enabled
+        if aggregator is None:
+            aggregator = ErrorFeedbackFedAvg(fcfg.qcfg) if ef_wanted \
+                else FedAvgAggregator(fcfg.qcfg)
+        elif ef_wanted != isinstance(aggregator, ErrorFeedbackFedAvg):
+            # the uplink encode (fcfg.error_feedback) and the residual
+            # store (aggregator type) must agree, or EF silently degrades
+            # to plain RTN / maintains dead residuals
+            raise ValueError(
+                "error_feedback={} (quant {}) requires {} aggregator, got "
+                "{}".format(fcfg.error_feedback,
+                            "on" if fcfg.qcfg.enabled else "off",
+                            "an ErrorFeedbackFedAvg" if ef_wanted
+                            else "a non-EF",
+                            type(aggregator).__name__))
+        self.aggregator = aggregator
         self.ckpt = CheckpointManager(scfg.checkpoint_dir) \
             if scfg.checkpoint_dir else None
         one_way = messages.message_wire_bytes(self.global_train, fcfg.qcfg)
         self.round_bytes_per_client = 2 * one_way
         self.initial_model_bytes = tree_bytes(self.frozen)
+        self._up_bytes_measured: Optional[int] = None
 
     # -- fault tolerance ----------------------------------------------------
     def save(self):
         if self.ckpt is None:
             return
+        # bit-generator state is a plain dict of ints/strings — it rides
+        # the JSON manifest as-is (no repr/eval round-trip)
         self.ckpt.save(self.round, {"train": self.global_train},
                        metadata={"round": self.round,
-                                 "rng_state": repr(
-                                     self.rng.bit_generator.state)})
+                                 "rng_state": self.rng.bit_generator.state})
 
     def try_resume(self) -> bool:
         if self.ckpt is None:
@@ -93,8 +127,12 @@ class FLServer:
         self.global_train = trees["train"]
         self.round = man["metadata"]["round"]
         st = man["metadata"].get("rng_state")
+        if isinstance(st, str):
+            # legacy manifests stored repr(state); literal_eval migrates
+            # them safely (plain dict of ints, never code)
+            st = ast.literal_eval(st)
         if st:
-            self.rng.bit_generator.state = eval(st)  # trusted local manifest
+            self.rng.bit_generator.state = st
         return True
 
     # -- one round (paper Fig. 1) --------------------------------------------
@@ -105,50 +143,61 @@ class FLServer:
         sampled = self.rng.choice(scfg.n_clients, size=k_dispatch,
                                   replace=False)
 
-        # (1) broadcast: clients reconstruct the quantized global adapters
+        # (1) broadcast: packed downlink; clients reconstruct the
+        # quantized global adapters
         g_bcast = flocora.broadcast(self.global_train, fcfg)
 
-        results = []
-        for cid in sampled:
-            if self.rng.random() < scfg.p_client_failure:
-                continue                        # client died mid-round
-            data = self.client_data[int(cid)]
-            batches = stack_local_batches(self.rng, data, self.ccfg)
-            batches = jax.tree.map(jnp.asarray, batches)
-            # (2) local training from the broadcast state
-            trained, local_loss = self.trainer(self.frozen, g_bcast, batches)
-            # (3) uplink: quantize (optionally with error feedback)
-            if fcfg.error_feedback and fcfg.qcfg.enabled:
-                res = self.ef_residuals.get(
-                    int(cid), aggregation.ef_init(trained))
-                recon, res = aggregation.ef_encode(trained, res, fcfg.qcfg)
-                self.ef_residuals[int(cid)] = jax.device_get(res)
-                recon = jax.tree.map(lambda r, x: r.astype(x.dtype),
-                                     recon, trained)
-            else:
-                recon = messages.roundtrip(trained, fcfg.qcfg)
-            latency = self.rng.exponential(1.0)  # simulated arrival time
-            n_i = len(next(iter(data.values())))
-            results.append((latency, n_i, recon, float(local_loss)))
-
-        if not results:
+        survivors = [int(cid) for cid in sampled
+                     if self.rng.random() >= scfg.p_client_failure]
+        if not survivors:
             self.round += 1
             return {"round": self.round, "n_agg": 0}
+
+        # (2) local training: the whole surviving cohort runs as ONE
+        # jitted vmapped program over stacked batches (fixed schedule
+        # length; per-client n_steps mask)
+        datas = [self.client_data[cid] for cid in survivors]
+        batches, n_steps = stack_cohort_batches(
+            self.rng, datas, self.ccfg, steps=self.cohort_schedule_steps)
+        batches = jax.tree.map(jnp.asarray, batches)
+        trained, losses = self.trainer(self.frozen, g_bcast, batches,
+                                       jnp.asarray(n_steps))
+        losses = np.asarray(losses)
+
+        # (3) uplink: each client emits its PACKED wire message
+        ef = isinstance(self.aggregator, ErrorFeedbackFedAvg)
+        results = []
+        for k, cid in enumerate(survivors):
+            t_k = jax.tree.map(lambda x: x[k], trained)
+            res = self.aggregator.residual(cid, t_k) if ef else None
+            msg, res = flocora.client_uplink(t_k, fcfg, res)
+            if ef:
+                self.aggregator.store_residual(cid, res)
+            latency = self.rng.exponential(1.0)  # simulated arrival time
+            n_i = len(next(iter(datas[k].values())))
+            results.append((latency, n_i, msg, float(losses[k])))
 
         # straggler policy: first K arrivals win
         results.sort(key=lambda r: r[0])
         kept = results[:k_target]
         weights = jnp.asarray([r[1] for r in kept], jnp.float32)
-        stacked = aggregation.stack_trees([r[2] for r in kept])
-        # (4) FedAvg over dequantized client messages
-        self.global_train = aggregation.fedavg(stacked, weights)
+        # (4) aggregation strategy; packed inputs lower onto the fused
+        # dequant+reduce kernel
+        self.global_train = self.aggregator.aggregate(
+            [r[2] for r in kept], weights)
         self.round += 1
 
+        if self._up_bytes_measured is None and fcfg.qcfg.enabled:
+            self._up_bytes_measured = messages.packed_wire_bytes(kept[0][2])
         rec = {"round": self.round, "n_agg": len(kept),
                "n_dropped": k_dispatch - len(results),
                "n_straggled": len(results) - len(kept),
                "client_loss": float(np.mean([r[3] for r in kept])),
-               "tcc_bytes": self.round * self.round_bytes_per_client}
+               # Eq. 2 incl. the shared-once initial model
+               "tcc_bytes": self.initial_model_bytes
+               + self.round * self.round_bytes_per_client}
+        if self._up_bytes_measured is not None:
+            rec["up_bytes_measured"] = self._up_bytes_measured
         if self.eval_fn and self.round % self.scfg.eval_every == 0:
             rec.update(self.eval_fn(self.frozen, self.global_train))
         self.history.append(rec)

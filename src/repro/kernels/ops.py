@@ -40,10 +40,10 @@ def quant_pack(x2d: Array, bits: int, block_c: int = 8):
     per = 32 // bits
     lane = per * 128
     xp = _pad_to(_pad_to(x2d, block_c, 0), lane, 1)
-    packed, scale, zp = quant_pack_pallas(xp, bits, block_c=block_c,
+    packed, scale, zp = quant_pack_pallas(xp, bits, n_valid=x2d.shape[1],
+                                          block_c=block_c,
                                           interpret=_interpret())
     c = x2d.shape[0]
-    nw = x2d.shape[1] * bits // 32 if x2d.shape[1] % per == 0 else None
     return packed[:c], scale[:c], zp[:c]
 
 

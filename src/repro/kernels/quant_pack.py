@@ -37,7 +37,9 @@ def _quant_pack_kernel(x_ref, packed_ref, scale_ref, zp_ref, *,
     scale = jnp.where(rng > 0, rng / qmax, 1.0)           # (bc,)
     zp = jnp.clip(jnp.round(-xmin / scale), 0, qmax)
     q = jnp.round(x / scale[:, None]) + zp[:, None]
-    q = jnp.clip(jnp.where(valid, q, zp[:, None]), 0, qmax)
+    # canonical zero padding past n_valid: packed words are byte-identical
+    # to the host/wire re-packing paths (messages.PackedLeaf)
+    q = jnp.where(valid, jnp.clip(q, 0, qmax), 0)
     q = q.astype(jnp.uint32)
     # pack `per` levels into each uint32 word (little-endian)
     grp = q.reshape(q.shape[0], n // per, per)
@@ -48,18 +50,24 @@ def _quant_pack_kernel(x_ref, packed_ref, scale_ref, zp_ref, *,
     zp_ref[...] = zp[:, None]
 
 
-def quant_pack_pallas(x: Array, bits: int, *, block_c: int = 8,
-                      interpret: bool = False):
+def quant_pack_pallas(x: Array, bits: int, *, n_valid: int | None = None,
+                      block_c: int = 8, interpret: bool = False):
     """x: (C, N) fp32, N % (32/bits * 128) == 0 (wrapper pads).
+
+    ``n_valid`` is the true (unpadded) column count — columns past it are
+    excluded from the min/max and packed as the zero-point level.
 
     Returns (packed (C, N*bits/32) uint32, scale (C,), zp (C,))."""
     c, n = x.shape
     per = 32 // bits
     assert c % block_c == 0 and n % per == 0
+    if n_valid is None:
+        n_valid = n
+    assert 0 < n_valid <= n
     nw = n // per
     grid = (c // block_c,)
     packed, scale, zp = pl.pallas_call(
-        functools.partial(_quant_pack_kernel, bits=bits, n_valid=n),
+        functools.partial(_quant_pack_kernel, bits=bits, n_valid=n_valid),
         grid=grid,
         in_specs=[pl.BlockSpec((block_c, n), lambda i: (i, 0))],
         out_specs=[

@@ -8,9 +8,10 @@ Hierarchical aggregation mapped onto the production mesh (DESIGN.md §3):
     n_k-weighted-averaged; the reduction over Kp lowers to an in-pod
     all-reduce over the cheap ICI 'data' axis only.
 
-  stage 2 (cross-pod, DCN): each pod QUANTIZES its partial aggregate and
-    the pods exchange the *packed uint8 levels + fp32 sidecars* — the
-    sharding constraint forces an all-gather of u8 tensors over the
+  stage 2 (cross-pod, DCN): each pod QUANTIZES its partial aggregate via
+    the shared wire codec (core/messages.pack_message) and the pods
+    exchange the *packed uint32 words + fp32 sidecars* — the sharding
+    constraint forces an all-gather of the packed payloads over the
     'pod' axis, so the compiled collective schedule itself carries
     FLoCoRA-compressed traffic across the slow inter-pod links (4x for
     int8, 16x for int2 vs fp32 exchange). Both pods dequantize and
@@ -27,12 +28,10 @@ from typing import Any, Optional
 
 import jax
 import jax.numpy as jnp
-import numpy as np
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
 from repro.configs.registry import ArchEntry
 from repro.core import messages
-from repro.core import quant as quant_mod
 from repro.core.quant import QuantConfig
 from repro.models import encdec as ED
 from repro.models import lm as LM
@@ -99,37 +98,16 @@ def build_fl_round(entry: ArchEntry, mesh: Mesh, *, clients_per_pod: int = 16,
             return jax.tree.map(lambda x: x[0], partial_)
 
         # ---- stage 2: quantized cross-pod exchange ---------------------
-        enc = jax.vmap(lambda t: messages.encode(t, qcfg))(partial_)
-        # wire format: bit-pack the levels (int2 -> 4 levels/byte) so the
-        # DCN gather carries exactly the paper's message bytes
-        is_q = lambda t: isinstance(t, dict) and "q" in t
-
-        def pack_leaf(d):
-            if not is_q(d):
-                return d
-            return {"q": jax.vmap(
-                        lambda q: quant_mod.pack_levels(q, qcfg.bits))(
-                        d["q"]),
-                    "scale": d["scale"], "zp": d["zp"],
-                    "_shape": d["q"].shape}
-
-        def unpack_leaf(d):
-            if not is_q(d):
-                return d
-            shape = d.pop("_shape")
-            n = int(np.prod(shape[1:]))
-            q = jax.vmap(lambda p: quant_mod.unpack_levels(
-                p, qcfg.bits, n).reshape(shape[1:]))(d["q"])
-            return {"q": q, "scale": d["scale"], "zp": d["zp"]}
-
-        if qcfg.enabled:
-            enc = jax.tree.map(pack_leaf, enc, is_leaf=is_q)
+        # the SHARED wire codec packs each pod's partial aggregate into
+        # uint32 words + fp32 sidecars (the pure-jnp twin: pallas_call
+        # can't batch under this vmap); static leaf metadata rides the
+        # PackedLeaf pytree aux, so no shape side-channel is needed
+        enc = jax.vmap(
+            lambda t: messages.pack_message(t, qcfg, use_kernel=False))(
+            partial_)
         # the barrier pins quantize+pack BEFORE the cross-pod gather (XLA
         # would otherwise sink the dequant across the collective and
         # gather fp32)
-        shapes_aside = jax.tree.map(
-            lambda d: d.pop("_shape") if is_q(d) and "_shape" in d else None,
-            enc, is_leaf=is_q) if qcfg.enabled else None
         enc = jax.lax.optimization_barrier(enc)
 
         def expose(x):
@@ -140,13 +118,7 @@ def build_fl_round(entry: ArchEntry, mesh: Mesh, *, clients_per_pod: int = 16,
 
         enc = jax.tree.map(expose, enc)
         enc = jax.lax.optimization_barrier(enc)
-        if qcfg.enabled:
-            enc = jax.tree.map(
-                lambda d, sh: unpack_leaf({**d, "_shape": sh})
-                if is_q(d) else d,
-                enc, shapes_aside, is_leaf=is_q)
-        dec = jax.vmap(lambda t: messages.decode(t, qcfg, jax.tree.map(
-            lambda s: s[0], partial_)))(enc) if qcfg.enabled else enc
+        dec = jax.vmap(messages.unpack_message)(enc)
         pod_w = wsum[:, 0] / jnp.sum(wsum)
         return jax.tree.map(
             lambda x: jnp.einsum("p...,p->...", x.astype(jnp.float32),

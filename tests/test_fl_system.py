@@ -38,6 +38,7 @@ def _server(data, tmpdir=None, **fl_kw):
         FLoCoRAConfig(rank=8, alpha=128.0, quant_bits=8))
 
 
+@pytest.mark.slow
 def test_fl_loss_decreases():
     data = _setup()
     srv = _server(data)
@@ -46,6 +47,7 @@ def test_fl_loss_decreases():
     assert last < first, (first, last)
 
 
+@pytest.mark.slow
 def test_fl_client_dropout_and_stragglers():
     data = _setup()
     srv = _server(data, p_client_failure=0.4, oversample=1.5)
@@ -55,6 +57,7 @@ def test_fl_client_dropout_and_stragglers():
         any(h["n_straggled"] > 0 for h in hist)
 
 
+@pytest.mark.slow
 def test_fl_checkpoint_resume_exact(tmp_path):
     data = _setup()
     srv = _server(data, tmpdir=str(tmp_path))
@@ -69,6 +72,7 @@ def test_fl_checkpoint_resume_exact(tmp_path):
         np.testing.assert_allclose(a, b, rtol=1e-6)
 
 
+@pytest.mark.slow
 def test_fl_fedprox_composes():
     """FLoCoRA + FedProx (aggregation-agnostic claim, paper §III)."""
     data = _setup(n=200, n_clients=4)

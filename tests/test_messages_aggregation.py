@@ -3,7 +3,11 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:         # optional dep: property tests skip, rest runs
+    given = settings = st = None
 
 from repro.core import aggregation, flocora, messages
 from repro.core.flocora import FLoCoRAConfig
@@ -83,22 +87,23 @@ def test_fedbuff_staleness_weighting():
     assert int(st2.count) == 0
 
 
-@settings(max_examples=25, deadline=None)
-@given(bits=st.sampled_from([4, 8]), k=st.integers(2, 6),
-       seed=st.integers(0, 2**31 - 1))
-def test_property_quantized_fedavg_error_bounded(bits, k, seed):
-    """Aggregated quantization error <= max client scale/2 (convexity)."""
-    keys = jax.random.split(jax.random.PRNGKey(seed), k)
-    trees = [{"w": jax.random.normal(kk, (3, 32))} for kk in keys]
-    w = jnp.ones(k)
-    stacked = aggregation.stack_trees(trees)
-    fp = aggregation.fedavg(stacked, w)
-    q = aggregation.fedavg_quantized(stacked, w, QuantConfig(bits=bits))
-    err = float(jnp.max(jnp.abs(fp["w"] - q["w"])))
-    from repro.core.quant import affine_qparams
-    smax = max(float(jnp.max(affine_qparams(t["w"], bits, 1)[0]))
-               for t in trees)
-    assert err <= smax / 2 + 1e-5
+if st is not None:
+    @settings(max_examples=25, deadline=None)
+    @given(bits=st.sampled_from([4, 8]), k=st.integers(2, 6),
+           seed=st.integers(0, 2**31 - 1))
+    def test_property_quantized_fedavg_error_bounded(bits, k, seed):
+        """Aggregated quantization error <= max client scale/2."""
+        keys = jax.random.split(jax.random.PRNGKey(seed), k)
+        trees = [{"w": jax.random.normal(kk, (3, 32))} for kk in keys]
+        w = jnp.ones(k)
+        stacked = aggregation.stack_trees(trees)
+        fp = aggregation.fedavg(stacked, w)
+        q = aggregation.fedavg_quantized(stacked, w, QuantConfig(bits=bits))
+        err = float(jnp.max(jnp.abs(fp["w"] - q["w"])))
+        from repro.core.quant import affine_qparams
+        smax = max(float(jnp.max(affine_qparams(t["w"], bits, 1)[0]))
+                   for t in trees)
+        assert err <= smax / 2 + 1e-5
 
 
 def test_wire_bytes_accounting_manual():
@@ -109,3 +114,8 @@ def test_wire_bytes_accounting_manual():
     assert messages.message_wire_bytes(t, QuantConfig(bits=4)) == 98
     # fp: (60+5)*4 = 260
     assert messages.message_wire_bytes(t, QuantConfig()) == 260
+
+
+if st is None:
+    def test_property_quantized_fedavg_error_bounded():
+        pytest.skip("hypothesis not installed")

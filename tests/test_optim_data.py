@@ -2,7 +2,12 @@
 import jax
 import jax.numpy as jnp
 import numpy as np
-from hypothesis import given, settings, strategies as st
+import pytest
+
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:         # optional dep: property tests skip, rest runs
+    given = settings = st = None
 
 from repro.data import SyntheticVision, lda_partition, markov_lm_batch
 from repro.optim import adamw, clip_by_global_norm, sgd
@@ -49,17 +54,18 @@ def test_cosine_schedule_endpoints():
     assert abs(float(f(110)) - 0.1) < 1e-6
 
 
-@settings(max_examples=20, deadline=None)
-@given(alpha=st.floats(0.1, 10.0), n_clients=st.integers(2, 30),
-       seed=st.integers(0, 1000))
-def test_property_lda_partition_covers_all(alpha, n_clients, seed):
-    rng = np.random.default_rng(seed)
-    labels = rng.integers(0, 10, 500)
-    parts = lda_partition(labels, n_clients, alpha, seed=seed)
-    allidx = np.concatenate(parts)
-    assert len(allidx) == 500
-    assert len(np.unique(allidx)) == 500          # exact cover, no dupes
-    assert min(len(p) for p in parts) >= 2
+if st is not None:
+    @settings(max_examples=20, deadline=None)
+    @given(alpha=st.floats(0.1, 10.0), n_clients=st.integers(2, 30),
+           seed=st.integers(0, 1000))
+    def test_property_lda_partition_covers_all(alpha, n_clients, seed):
+        rng = np.random.default_rng(seed)
+        labels = rng.integers(0, 10, 500)
+        parts = lda_partition(labels, n_clients, alpha, seed=seed)
+        allidx = np.concatenate(parts)
+        assert len(allidx) == 500
+        assert len(np.unique(allidx)) == 500      # exact cover, no dupes
+        assert min(len(p) for p in parts) >= 2
 
 
 def test_lda_skew_increases_as_alpha_drops():
@@ -99,3 +105,8 @@ def test_synthetic_vision_classes_separable():
     d = ((x.reshape(len(y), -1)[:, None] - t[None]) ** 2).sum(-1)
     acc = (d.argmin(1) == y).mean()
     assert acc > 0.6, acc
+
+
+if st is None:
+    def test_property_lda_partition_covers_all():
+        pytest.skip("hypothesis not installed")

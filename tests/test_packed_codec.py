@@ -1,0 +1,276 @@
+"""Wire-true packed codec + Aggregator strategies + packed FL round.
+
+Covers the acceptance contract of the packed pipeline:
+  * pack->unpack identity vs the fp ``encode``/``decode`` oracle;
+  * serialized wire size MEASURED from real buffers == the static
+    ``message_wire_bytes`` accounting for bits in {8, 4, 2};
+  * packed-path Aggregator == the fp ``fedavg_quantized`` reference;
+  * ``FLServer`` exchanges packed payloads end-to-end (fast tiny-model
+    twin of the slow-marked resnet system tests), incl. exact
+    checkpoint/resume with the JSON RNG state.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import aggregation, flocora, messages
+from repro.core.aggregation import ErrorFeedbackFedAvg, FedAvgAggregator, \
+    FedBuffAggregator
+from repro.core.flocora import FLoCoRAConfig
+from repro.core.quant import QuantConfig
+from repro.fl import ClientConfig, FLServer, ServerConfig
+
+
+def _tree(key, scale=1.0):
+    ks = jax.random.split(key, 4)
+    return {"a": jax.random.normal(ks[0], (6, 8)) * scale,
+            "b": jax.random.normal(ks[1], (4, 3, 5)) * scale,
+            "odd": jax.random.normal(ks[2], (7, 3)) * scale,
+            "norm": jax.random.normal(ks[3], (7,)) * scale}
+
+
+# ---------------------------------------------------------------------------
+# codec
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("bits", [2, 4, 8])
+def test_pack_unpack_matches_fp_oracle(bits):
+    t = _tree(jax.random.PRNGKey(0), 2.0)
+    cfg = QuantConfig(bits=bits)
+    got = messages.unpack_message(messages.pack_message(t, cfg))
+    ref = messages.roundtrip(t, cfg)
+    for k in t:
+        np.testing.assert_allclose(np.asarray(got[k]), np.asarray(ref[k]),
+                                   atol=1e-6)
+    # 1-D leaves pass through untouched
+    np.testing.assert_array_equal(np.asarray(got["norm"]),
+                                  np.asarray(t["norm"]))
+
+
+@pytest.mark.parametrize("bits", [2, 4, 8])
+def test_jnp_twin_matches_kernel_path(bits):
+    t = _tree(jax.random.PRNGKey(1))
+    cfg = QuantConfig(bits=bits)
+    a = messages.unpack_message(messages.pack_message(t, cfg))
+    b = messages.unpack_message(
+        messages.pack_message(t, cfg, use_kernel=False))
+    for k in t:
+        np.testing.assert_allclose(np.asarray(a[k]), np.asarray(b[k]),
+                                   atol=1e-6)
+
+
+@pytest.mark.parametrize("bits", [2, 4, 8])
+@pytest.mark.parametrize("per_stack", [False, True])
+def test_packed_wire_bytes_match_static_accounting(bits, per_stack):
+    """Real serialized buffer sizes == the shape-math accounting."""
+    t = _tree(jax.random.PRNGKey(2))
+    cfg = QuantConfig(bits=bits, per_stack=per_stack)
+    msg = messages.pack_message(t, cfg)
+    assert messages.packed_wire_bytes(msg) == \
+        messages.message_wire_bytes(t, cfg)
+
+
+@pytest.mark.parametrize("bits", [2, 4, 8])
+def test_wire_serialization_roundtrip(bits):
+    """to_wire -> from_wire reproduces the payload words byte-exactly."""
+    t = _tree(jax.random.PRNGKey(3))
+    msg = messages.pack_message(t, QuantConfig(bits=bits))
+    for k in ("a", "b", "odd"):
+        leaf = msg[k]
+        bufs = leaf.to_wire()
+        assert bufs["payload"].dtype == np.uint8
+        assert bufs["payload"].nbytes == \
+            (int(np.prod(leaf.shape)) * bits + 7) // 8
+        back = messages.PackedLeaf.from_wire(bufs, leaf.shape, leaf.dtype,
+                                             bits)
+        np.testing.assert_array_equal(np.asarray(back.payload),
+                                      np.asarray(leaf.payload))
+
+
+# ---------------------------------------------------------------------------
+# aggregation strategies
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("bits", [2, 4, 8])
+def test_packed_fedavg_equals_fp_reference(bits):
+    """Fused dequant_agg path == fedavg_quantized (fp roundtrip) ref."""
+    trees = [_tree(jax.random.PRNGKey(i)) for i in range(5)]
+    w = jnp.asarray([1.0, 2.0, 3.0, 1.5, 0.5])
+    qcfg = QuantConfig(bits=bits)
+    ref = aggregation.fedavg_quantized(aggregation.stack_trees(trees), w,
+                                       qcfg)
+    msgs = [messages.pack_message(t, qcfg) for t in trees]
+    got = FedAvgAggregator(qcfg).aggregate(msgs, w)
+    for k in ref:
+        np.testing.assert_allclose(np.asarray(got[k]), np.asarray(ref[k]),
+                                   rtol=1e-5, atol=1e-5)
+
+
+def test_fedavg_aggregator_fp_path():
+    trees = [_tree(jax.random.PRNGKey(i)) for i in range(3)]
+    w = jnp.asarray([1.0, 2.0, 1.0])
+    got = FedAvgAggregator(QuantConfig()).aggregate(trees, w)
+    ref = aggregation.fedavg(aggregation.stack_trees(trees), w)
+    for k in ref:
+        np.testing.assert_allclose(np.asarray(got[k]), np.asarray(ref[k]),
+                                   rtol=1e-6)
+
+
+def test_fedbuff_aggregator_uniform_equals_fedavg():
+    """With zero staleness the buffered rule reduces to FedAvg."""
+    trees = [_tree(jax.random.PRNGKey(i)) for i in range(3)]
+    w = jnp.asarray([1.0, 3.0, 2.0])
+    got = FedBuffAggregator().aggregate(trees, w)
+    ref = aggregation.fedavg(aggregation.stack_trees(trees), w)
+    for k in ref:
+        np.testing.assert_allclose(np.asarray(got[k]), np.asarray(ref[k]),
+                                   rtol=1e-5, atol=1e-6)
+
+
+def test_ef_packed_uplink_preserves_dtype():
+    """EF compensates in fp32 but the wire message must advertise the
+    ORIGINAL adapter dtypes (and the aggregate must come back in them)."""
+    cfg = FLoCoRAConfig(quant_bits=8, error_feedback=True)
+    x = {"w": (jax.random.normal(jax.random.PRNGKey(0), (4, 64))
+               ).astype(jnp.bfloat16),
+         "norm": jnp.ones((5,), jnp.bfloat16)}
+    msg, _ = flocora.client_uplink(x, cfg, None)
+    out = messages.unpack_message(msg)
+    assert out["w"].dtype == jnp.bfloat16
+    assert out["norm"].dtype == jnp.bfloat16
+    agg = FedAvgAggregator(cfg.qcfg).aggregate([msg, msg], jnp.ones(2))
+    assert agg["w"].dtype == jnp.bfloat16
+
+
+def test_aggregator_rejects_mismatched_bits():
+    t = _tree(jax.random.PRNGKey(0))
+    msgs = [messages.pack_message(t, QuantConfig(bits=4))]
+    with pytest.raises(ValueError):
+        FedAvgAggregator(QuantConfig(bits=8)).aggregate(msgs, jnp.ones(1))
+
+
+def test_ef_packed_uplink_reduces_bias():
+    """EF over the PACKED codec: time-averaged error decays vs RTN."""
+    cfg = FLoCoRAConfig(quant_bits=2, error_feedback=True)
+    x = {"w": jax.random.normal(jax.random.PRNGKey(0), (4, 64)) * 0.7}
+    res, acc = None, jnp.zeros_like(x["w"])
+    n = 16
+    for _ in range(n):
+        msg, res = flocora.client_uplink(x, cfg, res)
+        acc = acc + messages.unpack_message(msg)["w"]
+    bias_ef = float(jnp.mean(jnp.abs(acc / n - x["w"])))
+    bias_rtn = float(jnp.mean(jnp.abs(
+        messages.roundtrip(x, cfg.qcfg)["w"] - x["w"])))
+    assert bias_ef < bias_rtn * 0.7 or bias_ef < 1e-3
+
+
+# ---------------------------------------------------------------------------
+# packed FL round end-to-end (tiny model; fast twin of the slow system tests)
+# ---------------------------------------------------------------------------
+
+def _tiny_setup(n=96, n_clients=4, seed=0):
+    rng = np.random.default_rng(seed)
+    w_true = rng.normal(size=(16, 10)).astype(np.float32)
+    x = rng.normal(size=(n, 16)).astype(np.float32)
+    y = np.argmax(x @ w_true + 0.1 * rng.normal(size=(n, 10)), axis=1)
+    parts = np.array_split(rng.permutation(n), n_clients)
+    data = [{"x": x[p], "y": y[p].astype(np.int32)} for p in parts]
+    model = {"frozen": {"mu": jnp.zeros((16,))},
+             "train": {"w": jnp.asarray(0.01 * rng.normal(size=(16, 10)),
+                                        jnp.float32),
+                       "b": jnp.zeros((10,), jnp.float32)}}
+    return data, model
+
+
+def _tiny_loss(frozen, train, batch):
+    logits = (batch["x"] - frozen["mu"]) @ train["w"] + train["b"]
+    logp = jax.nn.log_softmax(logits)
+    loss = -jnp.mean(jnp.take_along_axis(logp, batch["y"][:, None],
+                                         axis=1))
+    return loss, {}
+
+
+def _tiny_server(data, model, tmpdir=None, **fl_kw):
+    return FLServer(
+        model, _tiny_loss, data,
+        ServerConfig(rounds=3, n_clients=len(data), clients_per_round=2,
+                     checkpoint_dir=tmpdir, checkpoint_every=1, **fl_kw),
+        ClientConfig(local_epochs=1, batch_size=8, lr=0.1),
+        FLoCoRAConfig(rank=8, alpha=128.0, quant_bits=8))
+
+
+@pytest.mark.parametrize("bits", [2, 4, 8])
+def test_server_round_packed_end_to_end(bits):
+    """Uplink bytes measured from real buffers == static accounting, and
+    the round trains (cohort engine + packed aggregation)."""
+    data, model = _tiny_setup()
+    srv = FLServer(
+        model, _tiny_loss, data,
+        ServerConfig(rounds=3, n_clients=4, clients_per_round=2),
+        ClientConfig(local_epochs=2, batch_size=8, lr=0.2),
+        FLoCoRAConfig(rank=8, alpha=128.0, quant_bits=bits))
+    hist = srv.run(3)
+    expected = messages.message_wire_bytes(srv.global_train, srv.fcfg.qcfg)
+    assert all(h["up_bytes_measured"] == expected for h in hist)
+    assert np.isfinite(hist[-1]["client_loss"])
+    assert hist[-1]["client_loss"] < hist[0]["client_loss"] * 1.5
+
+
+def test_server_tcc_includes_initial_model():
+    data, model = _tiny_setup()
+    srv = _tiny_server(data, model)
+    hist = srv.run(2)
+    assert hist[0]["tcc_bytes"] == \
+        srv.initial_model_bytes + srv.round_bytes_per_client
+    assert hist[1]["tcc_bytes"] == \
+        srv.initial_model_bytes + 2 * srv.round_bytes_per_client
+
+
+def test_server_checkpoint_resume_exact_with_json_rng(tmp_path):
+    """Resume restores adapters AND the sampler RNG (JSON bit-generator
+    state): the next round replays identically on both servers."""
+    data, model = _tiny_setup()
+    srv = _tiny_server(data, model, tmpdir=str(tmp_path))
+    srv.run(2)
+    srv2 = _tiny_server(data, model, tmpdir=str(tmp_path))
+    assert srv2.try_resume()
+    assert srv2.round == srv.round
+    assert srv2.rng.bit_generator.state == srv.rng.bit_generator.state
+    for a, b in zip(jax.tree.leaves(jax.device_get(srv.global_train)),
+                    jax.tree.leaves(jax.device_get(srv2.global_train))):
+        np.testing.assert_allclose(a, b, rtol=1e-6)
+    r1, r2 = srv.run_round(), srv2.run_round()
+    assert r1["client_loss"] == pytest.approx(r2["client_loss"], rel=1e-6)
+
+
+def test_server_rejects_mismatched_ef_aggregator():
+    """error_feedback and the aggregator type must agree (a mismatch
+    would silently disable EF or maintain dead residuals)."""
+    data, model = _tiny_setup()
+    with pytest.raises(ValueError):
+        FLServer(model, _tiny_loss, data,
+                 ServerConfig(n_clients=4, clients_per_round=2),
+                 ClientConfig(),
+                 FLoCoRAConfig(quant_bits=4, error_feedback=True),
+                 aggregator=FedAvgAggregator(QuantConfig(bits=4)))
+    with pytest.raises(ValueError):
+        FLServer(model, _tiny_loss, data,
+                 ServerConfig(n_clients=4, clients_per_round=2),
+                 ClientConfig(),
+                 FLoCoRAConfig(quant_bits=4),
+                 aggregator=ErrorFeedbackFedAvg(QuantConfig(bits=4)))
+
+
+def test_server_error_feedback_aggregator_selected():
+    data, model = _tiny_setup()
+    srv = FLServer(
+        model, _tiny_loss, data,
+        ServerConfig(rounds=2, n_clients=4, clients_per_round=2),
+        ClientConfig(local_epochs=1, batch_size=8, lr=0.1),
+        FLoCoRAConfig(rank=8, alpha=128.0, quant_bits=4,
+                      error_feedback=True))
+    assert isinstance(srv.aggregator, ErrorFeedbackFedAvg)
+    srv.run(2)
+    assert len(srv.aggregator.residuals) >= 1
+    assert np.isfinite(srv.history[-1]["client_loss"])
