@@ -14,8 +14,15 @@ point, absolute numbers scale with hardware):
     uplink message (``messages.packed_wire_bytes``, real buffers) for
     fp32 vs int8/4/2, cross-checked against the static accounting.
 
+``--rank-profile r1,r2,...`` adds the RANK-BUCKETED engine sweep: the
+cohort is split into rank tiers (round-robin), each bucket runs as one
+jitted vmapped program over adapters truncated to its tier's rank, and
+the sweep reports bucketed clients/sec vs everyone-at-max-rank plus the
+measured per-tier wire bytes.
+
     PYTHONPATH=src python -m benchmarks.round_throughput \
-        [--clients 8] [--samples 64] [--iters 3]
+        [--clients 8] [--samples 64] [--iters 3] \
+        [--rank-profile 4,8,16,32]
 """
 from __future__ import annotations
 
@@ -26,13 +33,13 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core import flocora, messages
-from repro.core.flocora import FLoCoRAConfig
+from repro.core import flocora, lora, messages
+from repro.core.flocora import FLoCoRAConfig, RankSchedule
 from repro.core.lora import LoRAConfig
 from repro.data import SyntheticVision, lda_partition
 from repro.fl.client import ClientConfig, make_cohort_trainer, \
     make_local_trainer, stack_cohort_batches, stack_local_batches, \
-    cohort_steps
+    cohort_steps, pad_cohort_batches, pow2_pad
 from repro.models.resnet import ResNetConfig, init as rinit, loss_fn
 
 
@@ -45,9 +52,9 @@ def _time(fn, iters: int) -> float:
     return (time.perf_counter() - t0) / iters
 
 
-def run(n_clients: int = 6, samples_per_client: int = 48,
-        iters: int = 2) -> list[str]:
-    rows = []
+def _setup_fl(n_clients: int, samples_per_client: int, rank: int):
+    """Shared benchmark workload: LDA-partitioned synthetic vision data
+    + frozen ResNet-8 with rank-``rank`` adapters (alpha = 16r)."""
     rng = np.random.default_rng(0)
     sv = SyntheticVision(seed=0)
     n = n_clients * samples_per_client
@@ -55,11 +62,19 @@ def run(n_clients: int = 6, samples_per_client: int = 48,
     x = sv.sample(rng, y).astype(np.float32)
     parts = lda_partition(y, n_clients, alpha=0.5, seed=0)
     datas = [{"x": x[p], "y": y[p].astype(np.int32)} for p in parts]
-
-    cfg = ResNetConfig(arch="resnet8", lora=LoRAConfig(rank=8, alpha=128.0))
+    cfg = ResNetConfig(arch="resnet8",
+                       lora=LoRAConfig(rank=rank, alpha=16.0 * rank))
     model = rinit(jax.random.PRNGKey(0), cfg)
     ccfg = ClientConfig(local_epochs=1, batch_size=16, lr=0.05)
     lfn = lambda f, t, b: loss_fn(f, t, cfg, b)
+    return rng, datas, model, ccfg, lfn
+
+
+def run(n_clients: int = 6, samples_per_client: int = 48,
+        iters: int = 2) -> list[str]:
+    rows = []
+    rng, datas, model, ccfg, lfn = _setup_fl(n_clients,
+                                             samples_per_client, rank=8)
 
     # equalized schedules (all clients run the full `steps`, no masking)
     # so both engines do identical training work
@@ -107,15 +122,91 @@ def run(n_clients: int = 6, samples_per_client: int = 48,
     return rows
 
 
+def run_rank_profile(profile: tuple[int, ...], n_clients: int = 6,
+                     samples_per_client: int = 48,
+                     iters: int = 2) -> list[str]:
+    """Rank-bucketed engine sweep: mixed-rank cohort clients/sec vs the
+    everyone-at-max-rank baseline, plus measured per-tier wire bytes."""
+    rows = []
+    r_max = max(profile)
+    rng, datas, model, ccfg, lfn = _setup_fl(n_clients,
+                                             samples_per_client, r_max)
+    coh = make_cohort_trainer(lfn, ccfg)
+    frozen, train0 = model["frozen"], model["train"]
+    sched = RankSchedule.tiered(profile, n_clients)
+    steps = cohort_steps(datas, ccfg)
+
+    # bucket the cohort by tier, pre-stage per-bucket batches + adapters
+    buckets: dict[int, list[int]] = {}
+    for cid, r in enumerate(sched.client_ranks):
+        buckets.setdefault(r, []).append(cid)
+    staged = []
+    for r in sorted(buckets):
+        cids = buckets[r]
+        b, ns = stack_cohort_batches(rng, [datas[c] for c in cids], ccfg,
+                                     steps=steps)
+        b, ns = pad_cohort_batches(b, ns, pow2_pad(len(cids)))
+        staged.append((jax.tree.map(jnp.asarray, b), jnp.asarray(ns),
+                       lora.resize_tree_rank(train0, r)))
+    base_b, base_ns = stack_cohort_batches(rng, datas, ccfg, steps=steps)
+    base_b = jax.tree.map(jnp.asarray, base_b)
+    base_ns = jnp.asarray(base_ns)
+
+    def run_bucketed():
+        outs = [coh(frozen, t0, b, ns) for b, ns, t0 in staged]
+        return outs[-1][0]
+
+    def run_uniform_max():
+        return coh(frozen, train0, base_b, base_ns)[0]
+
+    t_b = _time(run_bucketed, iters)
+    t_u = _time(run_uniform_max, iters)
+    tag = "x".join(str(r) for r in profile)
+    rows.append(f"round/bucketed_r{tag}_k{n_clients},{t_b * 1e6:.0f},"
+                f"clients_per_sec={n_clients / t_b:.2f} "
+                f"buckets={len(buckets)}")
+    rows.append(f"round/uniform_r{r_max}_k{n_clients},{t_u * 1e6:.0f},"
+                f"clients_per_sec={n_clients / t_u:.2f} "
+                f"vs_bucketed={t_u / t_b:.2f}x")
+
+    # measured wire bytes per tier (real packed buffers == static)
+    fcfg = FLoCoRAConfig(rank=r_max, alpha=16.0 * r_max, quant_bits=8,
+                         rank_schedule=sched)
+    for r in sorted(buckets):
+        msg = flocora.server_downlink(train0, fcfg, rank=r)
+        measured = messages.packed_wire_bytes(msg)
+        static = flocora.client_wire_bytes(train0, fcfg, r)
+        assert measured == static, (measured, static)
+        rows.append(f"round/wire_rank{r},0,bytes={measured} "
+                    f"clients={len(buckets[r])}")
+    fleet = flocora.fleet_tcc_bytes(train0, fcfg, 1)
+    rows.append(f"round/fleet_round_bytes,0,bytes={fleet}")
+    return rows
+
+
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--clients", type=int, default=6)
     ap.add_argument("--samples", type=int, default=48)
     ap.add_argument("--iters", type=int, default=2)
+    ap.add_argument("--rank-profile", type=str, default=None,
+                    help="comma-separated rank tiers, e.g. 4,8,16,32: "
+                         "sweep the rank-bucketed engine")
     args = ap.parse_args()
     if args.clients < 1 or args.samples < 1 or args.iters < 1:
         ap.error("--clients/--samples/--iters must be >= 1")
-    for row in run(args.clients, args.samples, args.iters):
+    if args.rank_profile:
+        try:
+            profile = tuple(int(t) for t in args.rank_profile.split(","))
+        except ValueError:
+            ap.error("--rank-profile must be comma-separated ints")
+        if not profile or any(r < 1 for r in profile):
+            ap.error("--rank-profile ranks must be >= 1")
+        rows = run_rank_profile(profile, args.clients, args.samples,
+                                args.iters)
+    else:
+        rows = run(args.clients, args.samples, args.iters)
+    for row in rows:
         print(row)
 
 

@@ -4,7 +4,12 @@ Federates a ResNet-8 over 20 clients on a synthetic CIFAR-like task,
 exchanging int8-quantized LoRA adapters, and prints the communication
 saving vs FedAvg (paper Tables I/III).
 
-    PYTHONPATH=src python examples/quickstart.py [--rounds 10]
+``--hetero`` runs the heterogeneous fleet instead: 10 clients in three
+rank tiers (r in {4, 8, 16} — phones, laptops, workstations), trained
+end-to-end by the rank-bucketed engine with per-client truncated
+broadcasts and measured mixed-rank TCC.
+
+    PYTHONPATH=src python examples/quickstart.py [--rounds 10] [--hetero]
 """
 import argparse
 import sys
@@ -15,7 +20,7 @@ import numpy as np
 sys.path.insert(0, "src")
 
 from repro.core import messages
-from repro.core.flocora import FLoCoRAConfig
+from repro.core.flocora import FLoCoRAConfig, RankSchedule
 from repro.core.lora import LoRAConfig
 from repro.core.quant import QuantConfig
 from repro.data import SyntheticVision, lda_partition
@@ -23,12 +28,8 @@ from repro.fl import ClientConfig, FLServer, ServerConfig
 from repro.models.resnet import ResNetConfig, init as resnet_init, loss_fn
 
 
-def main():
-    ap = argparse.ArgumentParser()
-    ap.add_argument("--rounds", type=int, default=6)
-    args = ap.parse_args()
-
-    # data: 100 clients worth of non-IID (LDA 0.5) synthetic images
+def run_uniform(rounds: int):
+    # data: 20 clients worth of non-IID (LDA 0.5) synthetic images
     rng = np.random.default_rng(0)
     sv = SyntheticVision(seed=0)
     y = rng.integers(0, 10, 2000)
@@ -52,11 +53,58 @@ def main():
 
     server = FLServer(
         model, lambda f, t, b: loss_fn(f, t, cfg, b), data,
-        ServerConfig(rounds=args.rounds, n_clients=20, clients_per_round=5),
+        ServerConfig(rounds=rounds, n_clients=20, clients_per_round=5),
         ClientConfig(local_epochs=1, batch_size=32, lr=0.01),
         FLoCoRAConfig(rank=32, alpha=512.0, quant_bits=8))
     for h in server.run():
         print(h)
+
+
+def run_hetero(rounds: int):
+    """Mixed-rank fleet: 10 clients in three rank tiers, end-to-end."""
+    from repro.core import flocora
+
+    rng = np.random.default_rng(0)
+    sv = SyntheticVision(seed=0)
+    y = rng.integers(0, 10, 1000)
+    x = sv.sample(rng, y)
+    parts = lda_partition(y, 10, alpha=0.5)
+    data = [{"x": x[p], "y": y[p].astype(np.int32)} for p in parts]
+
+    # three device classes: phones r=4, laptops r=8, workstations r=16;
+    # the server holds rank-16 globals and truncates each broadcast
+    sched = RankSchedule.tiered((4, 8, 16), n_clients=10)
+    cfg = ResNetConfig(arch="resnet8", lora=LoRAConfig(rank=16, alpha=256.0))
+    model = resnet_init(jax.random.PRNGKey(0), cfg)
+    fcfg = FLoCoRAConfig(rank=16, alpha=256.0, quant_bits=8,
+                         rank_schedule=sched)
+
+    for r in (4, 8, 16):
+        kb = flocora.client_wire_bytes(model["train"], fcfg, r) / 1e3
+        n = sum(1 for cr in sched.client_ranks if cr == r)
+        print(f"tier r={r:2d}: {n} clients, {kb:7.1f} kB one-way")
+
+    server = FLServer(
+        model, lambda f, t, b: loss_fn(f, t, cfg, b), data,
+        ServerConfig(rounds=rounds, n_clients=10, clients_per_round=6),
+        ClientConfig(local_epochs=1, batch_size=32, lr=0.01),
+        fcfg)
+    for h in server.run():
+        print({k: h[k] for k in ("round", "n_agg", "client_loss",
+                                 "cohort_ranks", "round_bytes",
+                                 "tcc_bytes") if k in h})
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--rounds", type=int, default=6)
+    ap.add_argument("--hetero", action="store_true",
+                    help="mixed-rank cohort (10 clients, 3 rank tiers)")
+    args = ap.parse_args()
+    if args.hetero:
+        run_hetero(args.rounds)
+    else:
+        run_uniform(args.rounds)
 
 
 if __name__ == "__main__":

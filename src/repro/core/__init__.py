@@ -2,15 +2,20 @@
 
 Public API re-exports.
 """
-from repro.core.flocora import FLoCoRAConfig, broadcast, client_uplink, \
-    server_downlink, server_round, round_wire_bytes, tcc
+from repro.core.flocora import FLoCoRAConfig, RankSchedule, broadcast, \
+    client_uplink, client_wire_bytes, fleet_tcc_bytes, server_downlink, \
+    server_round, round_wire_bytes, tcc
 from repro.core.aggregation import Aggregator, FedAvgAggregator, \
-    FedBuffAggregator, ErrorFeedbackFedAvg, fedavg_packed
+    FedBuffAggregator, ErrorFeedbackFedAvg, SVDRecombinationAggregator, \
+    bucket_by_rank, fedavg_hetero, fedavg_packed
 from repro.core.messages import PackedLeaf, pack_message, unpack_message, \
-    packed_wire_bytes, message_wire_bytes
+    packed_wire_bytes, message_wire_bytes, message_rank, message_to_wire, \
+    parse_wire_header
 from repro.core.lora import LoRAConfig, dense_lora_init, dense_lora_apply, \
     dense_merge, conv_lora_init, conv_lora_apply, conv_merge, linear_init, \
-    linear_apply, linear_logical
+    linear_apply, linear_logical, adapter_rank, is_adapter_pair, \
+    pad_adapter, slice_adapter, truncate_adapter, resize_adapter, \
+    resize_tree_rank, tree_ranks, tree_max_rank, svd_energy_rank
 from repro.core.quant import QuantConfig, affine_qparams, quantize, \
     dequantize, quant_dequant, pack_levels, unpack_levels
 from repro.core import messages, aggregation

@@ -24,12 +24,13 @@ is generic over the aggregation rule.
 from __future__ import annotations
 
 import dataclasses
-from typing import Any, Protocol, runtime_checkable
+from typing import Any, Optional, Protocol, runtime_checkable
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
-from repro.core import messages
+from repro.core import lora, messages
 from repro.core.messages import is_packed_leaf
 from repro.core.quant import QuantConfig
 from repro.kernels import ops as kops
@@ -97,6 +98,56 @@ def message_is_packed(msg: Any) -> bool:
     """True if any leaf of `msg` is a PackedLeaf (wire-form message)."""
     return any(is_packed_leaf(l) for l in
                jax.tree.leaves(msg, is_leaf=is_packed_leaf))
+
+
+# ---------------------------------------------------------------------------
+# Heterogeneous-rank aggregation (HetLoRA zero-pad / FLoRIST SVD)
+# ---------------------------------------------------------------------------
+
+def bucket_by_rank(msgs: list[Any]) -> dict[int, list[int]]:
+    """Group message indices by adapter rank (shape-inspected, so packed
+    and fp messages bucket alike). Messages without adapters land in
+    bucket 0. Buckets are ordered by ascending rank."""
+    buckets: dict[int, list[int]] = {}
+    for i, m in enumerate(msgs):
+        r = lora.tree_max_rank(m)
+        buckets.setdefault(0 if r is None else int(r), []).append(i)
+    return dict(sorted(buckets.items()))
+
+
+def fedavg_hetero(msgs: list[Any], weights: Array, r_target: int) -> Any:
+    """Zero-pad-to-max FedAvg over MIXED-rank client messages.
+
+    Clients are grouped into rank buckets; each bucket's (uniform-shape)
+    messages aggregate in one pass — packed buckets on the fused
+    ``dequant_agg`` Pallas kernel — then every bucket mean is zero-padded
+    to ``r_target`` and the bucket means combine with their weight-mass
+    fractions. Padding is linear, so this equals padding every client to
+    ``r_target`` first and running one global FedAvg."""
+    w = jnp.asarray(weights, jnp.float32)
+    total = jnp.sum(w)
+    fracs, means = [], []
+    for r, idxs in bucket_by_rank(msgs).items():
+        bmsgs = [msgs[i] for i in idxs]
+        bw = jnp.asarray([w[i] for i in idxs])
+        if message_is_packed(bmsgs[0]):
+            mean_b = fedavg_packed(bmsgs, bw)
+        else:
+            mean_b = fedavg(stack_trees(bmsgs), bw)
+        if r:
+            mean_b = lora.resize_tree_rank(mean_b, r_target,
+                                           method="slice")
+        fracs.append(jnp.sum(bw) / total)
+        means.append(mean_b)
+    if len(means) == 1:
+        return means[0]
+
+    def combine(*leaves):
+        acc = sum(f * l.astype(jnp.float32)
+                  for f, l in zip(fracs, leaves))
+        return acc.astype(leaves[0].dtype)
+
+    return jax.tree.map(combine, *means)
 
 
 # ---------------------------------------------------------------------------
@@ -206,22 +257,118 @@ class Aggregator(Protocol):
 
 @dataclasses.dataclass
 class FedAvgAggregator:
-    """Paper Eq. 1. Packed inputs lower onto the fused dequant_agg kernel
-    (after a bit-width sanity check against ``qcfg``); fp inputs reproduce
-    ``fedavg`` over the stacked trees."""
+    """Paper Eq. 1, generalized to heterogeneous ranks. Packed inputs
+    lower onto the fused dequant_agg kernel (after a bit-width sanity
+    check against ``qcfg``) — per rank bucket when the cohort is mixed,
+    with zero-pad-to-``r_target`` recombination; fp inputs reproduce
+    ``fedavg`` over the stacked trees. ``r_target`` is the LOWER bound
+    of the aggregated tree's rank (zero-pad semantics: a cohort whose
+    max client rank exceeds it still pads to that max, never truncates);
+    None pads to the round's max client rank. ``FLServer`` pins it to
+    the server rank, which its config validates as >= every scheduled
+    client rank."""
     qcfg: QuantConfig = dataclasses.field(default_factory=QuantConfig)
+    r_target: Optional[int] = None
+
+    def _check_bits(self, msg: Any) -> None:
+        if message_is_packed(msg) and self.qcfg.enabled:
+            for leaf in jax.tree.leaves(msg, is_leaf=is_packed_leaf):
+                if is_packed_leaf(leaf) and leaf.bits != self.qcfg.bits:
+                    raise ValueError(
+                        f"aggregator configured for {self.qcfg.bits}-"
+                        f"bit messages, got {leaf.bits}-bit payload")
+
+    def _round_rank(self, msgs: list[Any]) -> tuple[Optional[int], bool]:
+        """(target rank, heterogeneous?) for this round's messages."""
+        ranks = {r for m in msgs
+                 if (r := lora.tree_max_rank(m)) is not None}
+        if not ranks:
+            return None, False
+        target = max(self.r_target or 0, max(ranks))
+        return target, (len(ranks) > 1 or ranks != {target})
 
     def aggregate(self, msgs: list[Any], weights: Array) -> Any:
+        self._check_bits(msgs[0])
+        target, hetero = self._round_rank(msgs)
+        if hetero:
+            return fedavg_hetero(msgs, weights, target)
         if message_is_packed(msgs[0]):
-            if self.qcfg.enabled:
-                for leaf in jax.tree.leaves(msgs[0],
-                                            is_leaf=is_packed_leaf):
-                    if is_packed_leaf(leaf) and leaf.bits != self.qcfg.bits:
-                        raise ValueError(
-                            f"aggregator configured for {self.qcfg.bits}-"
-                            f"bit messages, got {leaf.bits}-bit payload")
             return fedavg_packed(msgs, weights)
         return fedavg(stack_trees(msgs), weights)
+
+
+@dataclasses.dataclass
+class SVDRecombinationAggregator(FedAvgAggregator):
+    """FLoRIST-style server recombination for (mixed-rank) LoRA fleets.
+
+    Non-adapter leaves take the rank-bucketed FedAvg path (fused
+    dequant_agg kernel per bucket). Each adapter pair is recombined from
+    the PRODUCT side: the weighted mean delta ``Σ_k w̄_k · down_k @ up_k``
+    (rank-free shape, so clients of any rank mix exactly) is thin-SVD'd
+    and singular values are thresholded at ``energy`` cumulative mass to
+    pick the SERVED rank — at most the round's max client rank — then the
+    balanced factors are zero-padded back to the global tree's rank.
+    Unlike factor averaging, this is exact on the aggregated delta up to
+    the discarded singular-value tail.
+
+    ``served_ranks`` records {adapter path: served rank} of the last
+    round (observability + the rank-annealing signal)."""
+    energy: float = 0.99
+    served_ranks: dict = dataclasses.field(default_factory=dict)
+
+    def aggregate(self, msgs: list[Any], weights: Array) -> Any:
+        # the base pass also averages the adapter leaves we are about to
+        # recombine — accepted redundancy: it keeps this class a pure
+        # override of the FedAvg result (base supplies the non-adapter
+        # leaves plus each pair's shape/dtype template)
+        base = super().aggregate(msgs, weights)
+        ranks = [lora.tree_max_rank(m) for m in msgs]
+        if all(r is None for r in ranks):
+            return base                       # no adapters to recombine
+        cap = max(r for r in ranks if r is not None)
+        # dequantize ONLY the adapter pairs (the recombination inputs);
+        # every other leaf keeps the fused-kernel result from `base` and
+        # the K full fp32 client trees are never materialized
+        trees = [lora._walk_pairs(m, messages.unpack_message)
+                 if message_is_packed(m) else m for m in msgs]
+        w = jnp.asarray(weights, jnp.float32)
+        w = w / jnp.sum(w)
+        self.served_ranks = {}
+
+        def recombine(path: str, node: Any, clients: list[Any]) -> Any:
+            if isinstance(node, dict):
+                if lora.is_adapter_pair(node):
+                    return self._recombine_pair(path, node, clients, w,
+                                                cap)
+                return {k: recombine(f"{path}/{k}", v,
+                                     [c[k] for c in clients])
+                        for k, v in node.items()}
+            if isinstance(node, (list, tuple)):
+                out = [recombine(f"{path}/{i}", v,
+                                 [c[i] for c in clients])
+                       for i, v in enumerate(node)]
+                return type(node)(out) if isinstance(node, tuple) else out
+            return node
+
+        return recombine("", base, trees)
+
+    def _recombine_pair(self, path: str, base_pair: dict,
+                        client_pairs: list[dict], w: Array,
+                        cap: int) -> dict:
+        delta = None
+        for wk, pair in zip(w, client_pairs):
+            down, up, _ = lora._dense_factors(pair)
+            d = wk * (down.astype(jnp.float32) @ up.astype(jnp.float32))
+            delta = d if delta is None else delta + d
+        u, s, vh = jnp.linalg.svd(delta, full_matrices=False)
+        r_served = min(lora.svd_energy_rank(s, self.energy), cap)
+        self.served_ranks[path.lstrip("/")] = r_served
+        root = jnp.sqrt(s[..., :r_served])
+        down_s = u[..., :, :r_served] * root[..., None, :]
+        up_s = root[..., :, None] * vh[..., :r_served, :]
+        _, _, kind = lora._dense_factors(base_pair)
+        served = lora._rebuild_pair(down_s, up_s, kind, base_pair)
+        return lora.pad_adapter(served, lora.adapter_rank(base_pair))
 
 
 @dataclasses.dataclass
@@ -253,7 +400,17 @@ class ErrorFeedbackFedAvg(FedAvgAggregator):
 
     def residual(self, cid: int, like: Any) -> Any:
         res = self.residuals.get(int(cid))
-        return ef_init(like) if res is None else res
+        if res is None:
+            return ef_init(like)
+        # a rank-annealed client's adapter shapes change between rounds;
+        # a stale residual must restart rather than desync the encode
+        like_leaves = jax.tree.leaves(like)
+        res_leaves = jax.tree.leaves(res)
+        if len(res_leaves) != len(like_leaves) or any(
+                tuple(np.shape(a)) != tuple(np.shape(b))
+                for a, b in zip(res_leaves, like_leaves)):
+            return ef_init(like)
+        return res
 
     def store_residual(self, cid: int, res: Any) -> None:
         # host numpy: one fp32 adapter tree per client ever sampled must

@@ -19,10 +19,77 @@ from typing import Any, Optional
 import jax
 import jax.numpy as jnp
 
-from repro.core import aggregation, messages
+from repro.core import aggregation, lora, messages
 from repro.core.quant import QuantConfig
 
 Array = jax.Array
+
+
+@dataclasses.dataclass(frozen=True)
+class RankSchedule:
+    """Per-client LoRA rank profile with optional round-wise annealing.
+
+    ``client_ranks[cid]`` is client cid's base adapter rank (phones get
+    r=4, workstations r=32, ...). With ``anneal_every > 0`` every
+    client's rank is multiplied by ``anneal_factor`` each
+    ``anneal_every`` rounds (floored at ``min_rank``) — late-training
+    updates concentrate in fewer directions, so the wire shrinks as the
+    run converges.
+
+    The server holds the global adapters at ``max_rank``; broadcast
+    truncates (slice) and uplinks arrive at each client's rank. The
+    effective alpha/r scale is the SERVER config's and is shared by all
+    clients, so mixed-rank products stay directly comparable."""
+    client_ranks: tuple[int, ...]
+    anneal_every: int = 0
+    anneal_factor: float = 0.5
+    min_rank: int = 2
+
+    def __post_init__(self):
+        if not self.client_ranks:
+            raise ValueError("RankSchedule needs at least one client rank")
+        if any(r < 1 for r in self.client_ranks):
+            raise ValueError(f"ranks must be >= 1: {self.client_ranks}")
+        if self.anneal_every < 0:
+            raise ValueError("anneal_every must be >= 0")
+        if not 0.0 < self.anneal_factor <= 1.0:
+            raise ValueError("anneal_factor must be in (0, 1]")
+        if self.min_rank < 1:
+            raise ValueError("min_rank must be >= 1 (rank-0 adapters "
+                             "cannot be packed)")
+
+    @classmethod
+    def uniform(cls, rank: int, n_clients: int, **kw) -> "RankSchedule":
+        return cls(client_ranks=(rank,) * n_clients, **kw)
+
+    @classmethod
+    def tiered(cls, tiers: tuple[int, ...], n_clients: int,
+               **kw) -> "RankSchedule":
+        """Round-robin assignment of rank tiers over client ids."""
+        ranks = tuple(tiers[i % len(tiers)] for i in range(n_clients))
+        return cls(client_ranks=ranks, **kw)
+
+    @property
+    def n_clients(self) -> int:
+        return len(self.client_ranks)
+
+    @property
+    def max_rank(self) -> int:
+        return max(self.client_ranks)
+
+    def rank_for(self, cid: int, rnd: int = 0) -> int:
+        """Client cid's rank at round ``rnd``. The ``min_rank`` floor
+        only applies to annealed shrinkage — a configured base rank
+        below ``min_rank`` is honored as-is."""
+        r = self.client_ranks[cid]
+        if self.anneal_every > 0:
+            r = max(self.min_rank,
+                    int(r * self.anneal_factor ** (rnd // self.anneal_every)))
+        return min(r, self.client_ranks[cid])
+
+    def ranks_at(self, rnd: int) -> tuple[int, ...]:
+        return tuple(self.rank_for(c, rnd) for c in
+                     range(len(self.client_ranks)))
 
 
 @dataclasses.dataclass(frozen=True)
@@ -32,6 +99,16 @@ class FLoCoRAConfig:
     quant_bits: Optional[int] = None  # None | 8 | 4 | 2
     error_feedback: bool = False    # beyond-paper EF on the client uplink
     head_mode: str = "dense"        # 'dense' (paper) | 'lora' | 'frozen'
+    # heterogeneous fleets: per-client rank profile (None = every client
+    # trains at `rank`, the paper's uniform setting)
+    rank_schedule: Optional[RankSchedule] = None
+
+    def __post_init__(self):
+        if self.rank_schedule is not None \
+                and self.rank_schedule.max_rank > self.rank:
+            raise ValueError(
+                f"rank_schedule max rank {self.rank_schedule.max_rank} "
+                f"exceeds the server rank {self.rank}")
 
     @property
     def qcfg(self) -> QuantConfig:
@@ -42,17 +119,29 @@ class FLoCoRAConfig:
         return self.alpha / self.rank
 
 
-def server_downlink(global_trainable: Any, cfg: FLoCoRAConfig) -> Any:
+
+def server_downlink(global_trainable: Any, cfg: FLoCoRAConfig,
+                    rank: Optional[int] = None) -> Any:
     """Step (1), wire form: the packed message the server broadcasts
-    (uint32 payloads + fp32 sidecars; fp tree when quantization is off)."""
+    (uint32 payloads + fp32 sidecars; fp tree when quantization is off).
+
+    ``rank`` truncates/pads the global adapters to the receiving
+    client's rank before packing (slice truncation: after an SVD
+    recombination the components are energy-ordered, and a fresh
+    zero-product adapter keeps its nonzero down-projection)."""
+    if rank is not None:
+        global_trainable = lora.resize_tree_rank(global_trainable, rank,
+                                                 method="slice")
     if not cfg.qcfg.enabled:
         return global_trainable
     return messages.pack_message(global_trainable, cfg.qcfg)
 
 
-def broadcast(global_trainable: Any, cfg: FLoCoRAConfig) -> Any:
+def broadcast(global_trainable: Any, cfg: FLoCoRAConfig,
+              rank: Optional[int] = None) -> Any:
     """Step (1): what clients reconstruct from the server message."""
-    return messages.unpack_message(server_downlink(global_trainable, cfg))
+    return messages.unpack_message(
+        server_downlink(global_trainable, cfg, rank))
 
 
 def client_uplink(trainable: Any, cfg: FLoCoRAConfig,
@@ -86,13 +175,41 @@ def server_round(stacked_client_trainables: Any, weights: Array,
                                         cfg.qcfg)
 
 
-def round_wire_bytes(trainable: Any, cfg: FLoCoRAConfig) -> dict:
-    """Per-round, per-client message accounting (both directions equal)."""
-    one_way = messages.message_wire_bytes(trainable, cfg.qcfg)
+def round_wire_bytes(trainable: Any, cfg: FLoCoRAConfig,
+                     rank: Optional[int] = None) -> dict:
+    """Per-round, PER-CLIENT message accounting (both directions equal).
+    With heterogeneous ranks the size depends on the client's rank."""
+    one_way = client_wire_bytes(trainable, cfg, rank)
     return {"down_bytes": one_way, "up_bytes": one_way,
             "round_bytes": 2 * one_way}
+
+
+def client_wire_bytes(trainable: Any, cfg: FLoCoRAConfig,
+                      rank: Optional[int] = None) -> int:
+    """One direction of one round for a client at ``rank`` (static
+    accounting over the resized adapter shapes)."""
+    if rank is not None:
+        trainable = lora.resize_tree_rank(trainable, rank, method="slice")
+    return messages.message_wire_bytes(trainable, cfg.qcfg)
 
 
 def tcc(trainable: Any, cfg: FLoCoRAConfig, rounds: int) -> int:
     """Paper Eq. 2: total communication cost for one client, R rounds."""
     return messages.tcc_bytes(trainable, cfg.qcfg, rounds)
+
+
+def fleet_tcc_bytes(trainable: Any, cfg: FLoCoRAConfig, rounds: int) -> int:
+    """Fleet-level TCC: heterogeneous uplinks+downlinks summed over every
+    client and round of the schedule (replaces Eq. 2's uniform
+    ``2 * one_way * rounds`` when a rank profile is set)."""
+    sched = cfg.rank_schedule
+    if sched is None:
+        return messages.tcc_bytes(trainable, cfg.qcfg, rounds)
+    by_rank: dict[int, int] = {}
+    total = 0
+    for rnd in range(rounds):
+        for r in sched.ranks_at(rnd):
+            if r not in by_rank:
+                by_rank[r] = client_wire_bytes(trainable, cfg, r)
+            total += 2 * by_rank[r]
+    return total

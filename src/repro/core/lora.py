@@ -17,7 +17,7 @@ never updated — e.g. token embeddings at LM scale).
 from __future__ import annotations
 
 import dataclasses
-from typing import Optional
+from typing import Any, Optional
 
 import jax
 import jax.numpy as jnp
@@ -208,6 +208,221 @@ def quantize_frozen_logical(logical) -> dict:
         return node
 
     return walk(logical)
+
+
+# ---------------------------------------------------------------------------
+# Heterogeneous-rank utilities (HetLoRA / FLoRIST-style federation)
+#
+# An adapter PAIR is a dict {'a', 'b'} holding the two low-rank factors.
+# Rank-axis conventions (set by the init functions above):
+#   dense:  a (*stack, d_in, r)  [down, rank LAST],  b (*stack, r, d_out)
+#           [up, rank at -2];
+#   conv:   b (kh, kw, c_in, r)  [down, rank LAST],  a (1, 1, r, c_out)
+#           [up, rank at dim 2].
+# All helpers below work on anything exposing ``.shape`` (jax arrays,
+# numpy, or wire-form PackedLeaf), so rank detection runs on fp trees and
+# packed messages alike. Resizing preserves the adapter PRODUCT a@b:
+# zero-padding exactly, slicing/SVD by truncation — and since this
+# codebase applies a fixed alpha/r scale from the server config (not from
+# the tree's rank), resized adapters stay directly comparable across
+# clients.
+# ---------------------------------------------------------------------------
+
+def adapter_kind(a, b) -> Optional[str]:
+    """'conv' | 'dense' | None from the two factors' shapes alone.
+
+    Conv is checked first: its up-factor carries the (1, 1) spatial dims
+    of the 1x1 recombination conv. (A *stacked* dense adapter whose stack
+    dims are exactly (1, 1) and whose d_in == d_out is indistinguishable
+    by shape and would be read as conv — no model in this repo builds
+    such a tree.)"""
+    ash, bsh = tuple(a.shape), tuple(b.shape)
+    if (len(ash) == 4 and len(bsh) == 4 and ash[0] == ash[1] == 1
+            and ash[2] == bsh[3]):
+        return "conv"
+    if (len(ash) >= 2 and len(bsh) >= 2 and ash[-1] == bsh[-2]
+            and ash[:-2] == bsh[:-2]):
+        return "dense"
+    return None
+
+
+def is_adapter_pair(node: Any) -> bool:
+    """True for a dict {'a','b'} whose factors form a LoRA pair."""
+    if not (isinstance(node, dict) and set(node) >= {"a", "b"}):
+        return False
+    a, b = node["a"], node["b"]
+    if not (hasattr(a, "shape") and hasattr(b, "shape")):
+        return False
+    return adapter_kind(a, b) is not None
+
+
+def adapter_rank(node: dict) -> int:
+    """Rank of a LoRA pair (the contracted low-rank dimension)."""
+    kind = adapter_kind(node["a"], node["b"])
+    if kind == "conv":
+        return node["a"].shape[2]
+    if kind == "dense":
+        return node["a"].shape[-1]
+    raise ValueError("not a LoRA adapter pair: "
+                     f"a{tuple(node['a'].shape)} b{tuple(node['b'].shape)}")
+
+
+def _walk_pairs(tree: Any, fn):
+    """Rebuild `tree`, applying ``fn(pair_dict)`` to every adapter pair.
+
+    Hand-rolled walk (not jax.tree.map) so wire-form leaves like
+    PackedLeaf — themselves pytrees — are treated as leaves."""
+    if isinstance(tree, dict):
+        if is_adapter_pair(tree):
+            return fn(tree)
+        return {k: _walk_pairs(v, fn) for k, v in tree.items()}
+    if isinstance(tree, (list, tuple)):
+        out = [_walk_pairs(v, fn) for v in tree]
+        return type(tree)(out) if isinstance(tree, tuple) else out
+    return tree
+
+
+def tree_ranks(tree: Any) -> tuple[int, ...]:
+    """Sorted distinct adapter ranks found in a (fp or packed) tree."""
+    found: set[int] = set()
+
+    def rec(pair):
+        found.add(int(adapter_rank(pair)))
+        return pair
+
+    _walk_pairs(tree, rec)
+    return tuple(sorted(found))
+
+
+def tree_max_rank(tree: Any) -> Optional[int]:
+    """Max adapter rank in the tree, or None if it holds no adapters."""
+    rs = tree_ranks(tree)
+    return rs[-1] if rs else None
+
+
+def _dense_factors(pair: dict) -> tuple[Array, Array, str]:
+    """(down, up, kind) in matrix orientation: down (..., m, r),
+    up (..., r, n). Conv factors are reshaped to 2-D."""
+    kind = adapter_kind(pair["a"], pair["b"])
+    if kind == "dense":
+        return pair["a"], pair["b"], kind
+    b, a = pair["b"], pair["a"]                     # conv: b=down, a=up
+    kh, kw, cin, r = b.shape
+    return b.reshape(kh * kw * cin, r), a.reshape(r, a.shape[3]), kind
+
+
+def _rebuild_pair(down: Array, up: Array, kind: str, like: dict) -> dict:
+    if kind == "dense":
+        return {**like, "a": down.astype(like["a"].dtype),
+                "b": up.astype(like["b"].dtype)}
+    kh, kw, cin, _ = like["b"].shape
+    r = down.shape[-1]
+    return {**like,
+            "b": down.reshape(kh, kw, cin, r).astype(like["b"].dtype),
+            "a": up.reshape(1, 1, r, up.shape[-1]).astype(like["a"].dtype)}
+
+
+def pad_adapter(pair: dict, r_target: int) -> dict:
+    """Zero-pad both factors' rank dims up to ``r_target``.
+
+    Exact: the padded components contribute 0 to the product a@b."""
+    down, up, kind = _dense_factors(pair)
+    r = down.shape[-1]
+    if r > r_target:
+        raise ValueError(f"pad_adapter: rank {r} > target {r_target}")
+    if r == r_target:
+        return pair
+    pd = [(0, 0)] * down.ndim
+    pd[-1] = (0, r_target - r)
+    pu = [(0, 0)] * up.ndim
+    pu[-2] = (0, r_target - r)
+    return _rebuild_pair(jnp.pad(down, pd), jnp.pad(up, pu), kind, pair)
+
+
+def slice_adapter(pair: dict, r_target: int) -> dict:
+    """Keep the leading ``r_target`` rank components (HetLoRA-style
+    truncation). After an SVD recombination the components are ordered by
+    singular value, so slicing keeps the top-energy directions; it also
+    inverts ``pad_adapter`` exactly."""
+    down, up, kind = _dense_factors(pair)
+    if down.shape[-1] < r_target:
+        raise ValueError(f"slice_adapter: rank {down.shape[-1]} < target "
+                         f"{r_target}")
+    return _rebuild_pair(down[..., :r_target],
+                         up[..., :r_target, :], kind, pair)
+
+
+def truncate_adapter(a: Array, b: Array, r_target: int
+                     ) -> tuple[Array, Array]:
+    """SVD re-projection: the best rank-``r_target`` factorization of the
+    product ``a @ b`` (dense orientation, stacked dims batched).
+
+    Returns (a', b') with balanced factors a' = U·√S, b' = √S·Vᵀ and rank
+    dims exactly ``r_target`` (zero-padded when the product's intrinsic
+    rank is smaller). Any adapter can be resized without re-init."""
+    m = a.astype(jnp.float32) @ b.astype(jnp.float32)
+    u, s, vh = jnp.linalg.svd(m, full_matrices=False)
+    k = min(r_target, s.shape[-1])
+    root = jnp.sqrt(s[..., :k])
+    a_t = u[..., :, :k] * root[..., None, :]
+    b_t = root[..., :, None] * vh[..., :k, :]
+    if k < r_target:
+        pa = [(0, 0)] * a_t.ndim
+        pa[-1] = (0, r_target - k)
+        pb = [(0, 0)] * b_t.ndim
+        pb[-2] = (0, r_target - k)
+        a_t, b_t = jnp.pad(a_t, pa), jnp.pad(b_t, pb)
+    return a_t.astype(a.dtype), b_t.astype(b.dtype)
+
+
+def svd_adapter(pair: dict, r_target: int) -> dict:
+    """``truncate_adapter`` applied to a pair dict (conv handled)."""
+    down, up, kind = _dense_factors(pair)
+    d_t, u_t = truncate_adapter(down, up, r_target)
+    return _rebuild_pair(d_t, u_t, kind, pair)
+
+
+def resize_adapter(pair: dict, r_target: int, method: str = "slice") -> dict:
+    """Resize one adapter pair to ``r_target``: zero-pad when growing;
+    ``method`` ('slice' | 'svd') when shrinking. 'slice' (default, the
+    broadcast path) keeps leading components — crucial for fresh
+    adapters whose product is still zero, where an SVD would return
+    all-zero factors and kill the gradient; 'svd' is the
+    energy-optimal truncation for trained adapters."""
+    r = adapter_rank(pair)
+    if r == r_target:
+        return pair
+    if r < r_target:
+        return pad_adapter(pair, r_target)
+    if method == "slice":
+        return slice_adapter(pair, r_target)
+    if method == "svd":
+        return svd_adapter(pair, r_target)
+    raise ValueError(f"unknown resize method: {method}")
+
+
+def resize_tree_rank(tree: Any, r_target: int,
+                     method: str = "slice") -> Any:
+    """Resize every adapter pair in a trainable tree to ``r_target``;
+    non-adapter leaves (norms, dense weights, biases) pass through
+    untouched — their shapes are rank-independent."""
+    return _walk_pairs(tree, lambda p: resize_adapter(p, r_target, method))
+
+
+def svd_energy_rank(s: Array, energy: float) -> int:
+    """Smallest k with cumsum(s²)/sum(s²) >= energy (FLoRIST singular-
+    value thresholding). Batched inputs take the max over the batch so a
+    stacked adapter serves one uniform rank. Returns >= 1."""
+    s2 = jnp.square(s.astype(jnp.float32))
+    tot = jnp.sum(s2, axis=-1, keepdims=True)
+    frac = jnp.cumsum(s2, axis=-1) / jnp.maximum(tot, 1e-30)
+    need = jnp.sum(frac < energy, axis=-1) + 1
+    # an all-zero slice (e.g. one fresh layer in a stacked adapter) has
+    # frac == 0 everywhere; rank 1 serves it exactly — don't let it
+    # force the full rank through the batch max
+    need = jnp.where(tot[..., 0] > 0, need, 1)
+    k = int(jnp.max(need))
+    return max(1, min(k, s.shape[-1]))
 
 
 def linear_logical(d_in_name: Optional[str], d_out_name: Optional[str],

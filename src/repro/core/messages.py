@@ -306,12 +306,64 @@ def unpack_message(msg: Any) -> Any:
     return jax.tree.map(up, msg, is_leaf=is_packed_leaf)
 
 
-def message_to_wire(msg: Any) -> list[tuple[str, dict]]:
-    """Serialize a packed message to named host buffers (uplink form)."""
+# ---------------------------------------------------------------------------
+# Wire header: every serialized message leads with a fixed 16-byte header
+# carrying the sender's adapter RANK, so a heterogeneous-rank server can
+# route a message to the right aggregation bucket before deserializing a
+# single payload. The header is a fixed transport framing cost and is NOT
+# part of ``message_wire_bytes``/``packed_wire_bytes`` — those reproduce
+# the paper's payload accounting (Tables III/IV) byte-exactly.
+# ---------------------------------------------------------------------------
+
+WIRE_MAGIC = 0x464C4F43          # "FLOC"
+WIRE_VERSION = 2                 # v2: rank-tagged heterogeneous messages
+HEADER_KEY = "__header__"
+HEADER_BYTES = 16                # 4 x uint32: magic, version, rank, bits
+
+
+def message_rank(msg: Any) -> int:
+    """Max adapter rank of a (fp or packed) message; 0 if it carries no
+    LoRA pairs (rank detection is shape-only, so it works on PackedLeaf
+    trees without touching a payload)."""
+    from repro.core import lora
+    r = lora.tree_max_rank(msg)
+    return 0 if r is None else int(r)
+
+
+def wire_header(rank: int, bits: Optional[int]) -> np.ndarray:
+    """The leading uint32[4] buffer of a serialized message."""
+    return np.asarray([WIRE_MAGIC, WIRE_VERSION, rank, bits or 0],
+                      np.uint32)
+
+
+def parse_wire_header(buf: np.ndarray) -> dict:
+    """Validate + decode the header -> {'rank': int, 'bits': int|None}."""
+    h = np.asarray(buf, np.uint32).reshape(-1)
+    if h.shape[0] != 4 or int(h[0]) != WIRE_MAGIC:
+        raise ValueError("not a FLoCoRA wire message (bad magic)")
+    if int(h[1]) > WIRE_VERSION:
+        raise ValueError(f"wire version {int(h[1])} is newer than this "
+                         f"codec (v{WIRE_VERSION})")
+    bits = int(h[3])
+    return {"version": int(h[1]), "rank": int(h[2]),
+            "bits": bits if bits else None}
+
+
+def message_to_wire(msg: Any, include_header: bool = True
+                    ) -> list[tuple[str, dict]]:
+    """Serialize a packed message to named host buffers (uplink form).
+
+    The first entry is the rank-tagged wire header (``HEADER_KEY``)
+    unless ``include_header=False``."""
     from repro.utils.tree import _path_str
     flat, _ = jax.tree_util.tree_flatten_with_path(
         msg, is_leaf=is_packed_leaf)
     out = []
+    if include_header:
+        bits = next((leaf.bits for _, leaf in flat
+                     if is_packed_leaf(leaf)), None)
+        out.append((HEADER_KEY,
+                    {"header": wire_header(message_rank(msg), bits)}))
     for path, leaf in flat:
         if is_packed_leaf(leaf):
             out.append((_path_str(path), leaf.to_wire()))
@@ -322,9 +374,13 @@ def message_to_wire(msg: Any) -> list[tuple[str, dict]]:
 
 
 def packed_wire_bytes(msg: Any) -> int:
-    """Bytes on the wire, MEASURED from the real serialized buffers (not
-    shape math) — the cross-check for ``message_wire_bytes``."""
+    """Payload bytes on the wire, MEASURED from the real serialized
+    buffers (not shape math) — the cross-check for
+    ``message_wire_bytes``. Excludes the fixed 16-byte header, matching
+    the paper's accounting."""
     total = 0
-    for _, bufs in message_to_wire(msg):
+    for name, bufs in message_to_wire(msg):
+        if name == HEADER_KEY:
+            continue
         total += sum(b.nbytes for b in bufs.values())
     return total

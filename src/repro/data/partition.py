@@ -7,12 +7,25 @@ import numpy as np
 
 
 def lda_partition(labels: np.ndarray, n_clients: int, alpha: float,
-                  seed: int = 0, min_size: int = 2) -> list[np.ndarray]:
+                  seed: int = 0, min_size: int = 2,
+                  max_retries: int = 1000) -> list[np.ndarray]:
     """Returns per-client index arrays. Each class's examples are split
-    across clients by a Dirichlet(alpha) draw."""
+    across clients by a Dirichlet(alpha) draw.
+
+    The ``min_size`` retry loop is BOUNDED: adversarially small alpha
+    concentrates whole classes on single clients, and when
+    ``n_clients * min_size`` approaches (or exceeds) ``len(labels)`` no
+    draw may ever satisfy the floor. After ``max_retries`` rejected
+    draws the last draw is repaired deterministically — starved clients
+    steal indices from the largest buckets — so the call always
+    terminates with every index assigned exactly once."""
+    if n_clients * min_size > len(labels):
+        raise ValueError(
+            f"min_size={min_size} infeasible: {n_clients} clients need "
+            f"{n_clients * min_size} samples, have {len(labels)}")
     rng = np.random.default_rng(seed)
     n_classes = int(labels.max()) + 1
-    while True:
+    for _ in range(max(1, max_retries)):
         buckets: list[list[int]] = [[] for _ in range(n_clients)]
         for c in range(n_classes):
             idx = np.where(labels == c)[0]
@@ -24,6 +37,13 @@ def lda_partition(labels: np.ndarray, n_clients: int, alpha: float,
         sizes = [len(b) for b in buckets]
         if min(sizes) >= min_size:
             break
+    else:
+        # repair the final draw: move tail indices from the fullest
+        # buckets onto starved clients until everyone meets the floor
+        for i in sorted(range(n_clients), key=lambda j: len(buckets[j])):
+            while len(buckets[i]) < min_size:
+                donor = max(range(n_clients), key=lambda j: len(buckets[j]))
+                buckets[i].append(buckets[donor].pop())
     out = []
     for b in buckets:
         arr = np.asarray(b, np.int64)

@@ -1,4 +1,5 @@
 from repro.fl.client import ClientConfig, make_local_trainer, \
-    make_cohort_trainer, stack_local_batches, stack_cohort_batches
+    make_cohort_trainer, stack_local_batches, stack_cohort_batches, \
+    pad_cohort_batches, pow2_pad
 from repro.fl.server import ServerConfig, FLServer
 from repro.fl.elastic import elastic_restore

@@ -175,6 +175,34 @@ def cohort_steps(datas: list[dict], cfg: ClientConfig) -> int:
     return max(natural_steps(d, cfg) for d in datas)
 
 
+def pow2_pad(k: int) -> int:
+    """Next power of two >= k. The rank-bucketed engine pads each
+    bucket's client dim to a pow2 so the per-bucket compiled-program
+    count is bounded by #distinct-ranks x log2(max cohort) instead of
+    #ranks x #bucket-sizes."""
+    p = 1
+    while p < k:
+        p *= 2
+    return p
+
+
+def pad_cohort_batches(batches: dict, n_steps: np.ndarray, k_pad: int
+                       ) -> tuple[dict, np.ndarray]:
+    """Pad the leading client dim of a stacked cohort to ``k_pad`` by
+    repeating client 0's batches with ``n_steps = 0``: padded rows run
+    fully masked (no parameter updates) and their outputs are
+    discarded."""
+    k = int(n_steps.shape[0])
+    if k_pad <= k:
+        return batches, n_steps
+    reps = k_pad - k
+    out = {key: np.concatenate([v, np.repeat(v[:1], reps, axis=0)],
+                               axis=0)
+           for key, v in batches.items()}
+    return out, np.concatenate([n_steps,
+                                np.zeros(reps, np.int32)]).astype(np.int32)
+
+
 def stack_cohort_batches(rng: np.random.Generator, datas: list[dict],
                          cfg: ClientConfig,
                          steps: Optional[int] = None

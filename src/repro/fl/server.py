@@ -7,18 +7,26 @@ Production-shaped features:
     synchronous FedAvg becomes deadline-robust;
   * CLIENT DROPOUT: a failed client (prob p_fail) contributes nothing;
     aggregation weights renormalize over survivors — a round never blocks;
-  * VMAPPED COHORT ENGINE: the surviving clients' local runs execute as
-    ONE jitted vmapped program over stacked batches, not a sequential
-    Python loop (see fl/client.py);
-  * WIRE-TRUE quantized exchange per the paper: broadcast and uplink
-    travel as PACKED messages (uint32 payloads + fp32 sidecars,
-    core/messages.py) and the server aggregates the packed payloads on
-    the fused dequant_agg kernel via a pluggable Aggregator strategy —
-    with optional error feedback (beyond paper);
+  * RANK-BUCKETED COHORT ENGINE: with a heterogeneous rank profile
+    (``FLoCoRAConfig.rank_schedule``) the surviving clients are grouped
+    by adapter rank and each bucket runs as ONE jitted vmapped program
+    (bucket sizes pad to pow2, so the compile count is bounded by
+    #distinct-ranks x log2(max cohort)); uniform fleets keep the single
+    vmapped cohort program (see fl/client.py);
+  * WIRE-TRUE quantized exchange per the paper: broadcast truncates the
+    global adapters to each client's rank, messages travel PACKED (uint32
+    payloads + fp32 sidecars + rank-tagged header, core/messages.py) and
+    the server aggregates the packed payloads on the fused dequant_agg
+    kernel — per rank bucket when mixed — via a pluggable Aggregator
+    strategy (zero-pad FedAvg, FLoRIST-style SVD recombination, FedBuff,
+    optional error feedback);
   * atomic checkpoint/resume of (round, global adapters, sampler RNG) —
     a restarted server continues the exact run; the RNG bit-generator
     state rides the JSON manifest directly;
-  * TCC accounting per Eq. 2 (including the shared-once initial model).
+  * TCC accounting derived from MEASURED emitted message sizes (cached
+    per rank): heterogeneous fleets sum per-client uplinks/downlinks
+    instead of Eq. 2's uniform ``2 * one_way * rounds``, and the
+    shared-once initial model is included.
 """
 from __future__ import annotations
 
@@ -36,7 +44,7 @@ from repro.core.aggregation import Aggregator, ErrorFeedbackFedAvg, \
 from repro.core.flocora import FLoCoRAConfig
 from repro.checkpoint import CheckpointManager
 from repro.fl.client import ClientConfig, cohort_steps, \
-    make_cohort_trainer, stack_cohort_batches
+    make_cohort_trainer, pad_cohort_batches, pow2_pad, stack_cohort_batches
 from repro.utils.tree import tree_bytes
 
 Array = jax.Array
@@ -84,10 +92,16 @@ class FLServer:
         # shape never changes between rounds (only distinct cohort sizes
         # K retrace), and small clients are masked, not over-trained
         self.cohort_schedule_steps = cohort_steps(client_data, ccfg)
+        self.rank_schedule = fcfg.rank_schedule
+        if self.rank_schedule is not None \
+                and self.rank_schedule.n_clients != scfg.n_clients:
+            raise ValueError(
+                f"rank_schedule covers {self.rank_schedule.n_clients} "
+                f"clients, server has {scfg.n_clients}")
         ef_wanted = fcfg.error_feedback and fcfg.qcfg.enabled
         if aggregator is None:
-            aggregator = ErrorFeedbackFedAvg(fcfg.qcfg) if ef_wanted \
-                else FedAvgAggregator(fcfg.qcfg)
+            aggregator = ErrorFeedbackFedAvg(fcfg.qcfg, fcfg.rank) \
+                if ef_wanted else FedAvgAggregator(fcfg.qcfg, fcfg.rank)
         elif ef_wanted != isinstance(aggregator, ErrorFeedbackFedAvg):
             # the uplink encode (fcfg.error_feedback) and the residual
             # store (aggregator type) must agree, or EF silently degrades
@@ -99,13 +113,81 @@ class FLServer:
                             "an ErrorFeedbackFedAvg" if ef_wanted
                             else "a non-EF",
                             type(aggregator).__name__))
+        sched = fcfg.rank_schedule
+        if sched is not None:
+            mixed = (len(set(sched.client_ranks)) > 1
+                     or sched.max_rank != fcfg.rank
+                     or sched.anneal_every > 0)
+            if mixed and not isinstance(aggregator, FedAvgAggregator):
+                # e.g. FedBuff has no rank-bucketed path: fail at config
+                # time, not with a shape error mid-round
+                raise ValueError(
+                    f"{type(aggregator).__name__} cannot aggregate "
+                    "mixed-rank cohorts; use FedAvgAggregator (or a "
+                    "subclass such as SVDRecombinationAggregator)")
+            explicit = getattr(aggregator, "r_target", None)
+            if explicit is not None and explicit < sched.max_rank:
+                # a target below a scheduled client rank would let the
+                # global tree's shape float with each round's cohort
+                raise ValueError(
+                    f"aggregator r_target={explicit} is below the rank "
+                    f"schedule's max rank {sched.max_rank}")
+        if getattr(aggregator, "r_target", 0) is None:
+            # pin the global tree's rank on a copy so the caller's
+            # instance stays reusable across servers — mutable stores
+            # (EF residuals, served ranks) must not alias the copy
+            fields: dict[str, Any] = {"r_target": fcfg.rank}
+            if hasattr(aggregator, "residuals"):
+                fields["residuals"] = dict(aggregator.residuals)
+            if hasattr(aggregator, "served_ranks"):
+                fields["served_ranks"] = dict(aggregator.served_ranks)
+            aggregator = dataclasses.replace(aggregator, **fields)
         self.aggregator = aggregator
         self.ckpt = CheckpointManager(scfg.checkpoint_dir) \
             if scfg.checkpoint_dir else None
-        one_way = messages.message_wire_bytes(self.global_train, fcfg.qcfg)
-        self.round_bytes_per_client = 2 * one_way
+        # TCC is derived from MEASURED emitted message sizes, cached per
+        # client rank (message size is shape-determined, so one measure
+        # per rank is exact); the uplink re-measure cross-checks that
+        # EF/quant/rank changes never desynchronize the accounting
+        self._down_bytes_by_rank: dict[int, int] = {}
+        self._up_bytes_by_rank: dict[int, int] = {}
         self.initial_model_bytes = tree_bytes(self.frozen)
-        self._up_bytes_measured: Optional[int] = None
+        self._tcc_cum = self.initial_model_bytes
+
+    @property
+    def round_bytes_per_client(self) -> int:
+        """2x the MEASURED one-way message size at the server rank
+        (lazy: the first access emits and measures a downlink)."""
+        return 2 * self._downlink_bytes(self.fcfg.rank)
+
+    # -- per-rank wire accounting (measured, not shape math) ----------------
+    def _rank_for(self, cid: int, rnd: int) -> int:
+        if self.rank_schedule is None:
+            return self.fcfg.rank
+        return self.rank_schedule.rank_for(cid, rnd)
+
+    def _bcast_rank(self, rank: int) -> Optional[int]:
+        """None keeps the uniform fleet's broadcast byte-identical to the
+        classic path (no resize walk)."""
+        return rank if self.rank_schedule is not None else None
+
+    def _downlink_bytes(self, rank: int) -> int:
+        got = self._down_bytes_by_rank.get(rank)
+        if got is None:
+            msg = flocora.server_downlink(self.global_train, self.fcfg,
+                                          self._bcast_rank(rank))
+            got = messages.packed_wire_bytes(msg)
+            self._down_bytes_by_rank[rank] = got
+        return got
+
+    def _uplink_bytes(self, rank: int, msg: Any = None) -> int:
+        got = self._up_bytes_by_rank.get(rank)
+        if got is None:
+            if msg is None:            # no uplink emitted yet at this rank
+                return self._downlink_bytes(rank)
+            got = messages.packed_wire_bytes(msg)
+            self._up_bytes_by_rank[rank] = got
+        return got
 
     # -- fault tolerance ----------------------------------------------------
     def save(self):
@@ -115,6 +197,7 @@ class FLServer:
         # the JSON manifest as-is (no repr/eval round-trip)
         self.ckpt.save(self.round, {"train": self.global_train},
                        metadata={"round": self.round,
+                                 "tcc_bytes": self._tcc_cum,
                                  "rng_state": self.rng.bit_generator.state})
 
     def try_resume(self) -> bool:
@@ -126,6 +209,12 @@ class FLServer:
         step, trees, man = got
         self.global_train = trees["train"]
         self.round = man["metadata"]["round"]
+        # legacy manifests predate measured TCC: rebuild per Eq. 2
+        self._tcc_cum = man["metadata"].get(
+            "tcc_bytes",
+            self.initial_model_bytes
+            + self.round * self.scfg.clients_per_round
+            * self.round_bytes_per_client)
         st = man["metadata"].get("rng_state")
         if isinstance(st, str):
             # legacy manifests stored repr(state); literal_eval migrates
@@ -138,66 +227,102 @@ class FLServer:
     # -- one round (paper Fig. 1) --------------------------------------------
     def run_round(self) -> dict:
         scfg, fcfg = self.scfg, self.fcfg
+        rnd = self.round                      # schedules are 0-based
         k_target = scfg.clients_per_round
         k_dispatch = max(k_target, int(round(scfg.oversample * k_target)))
         sampled = self.rng.choice(scfg.n_clients, size=k_dispatch,
                                   replace=False)
-
-        # (1) broadcast: packed downlink; clients reconstruct the
-        # quantized global adapters
-        g_bcast = flocora.broadcast(self.global_train, fcfg)
+        rank_of = {int(cid): self._rank_for(int(cid), rnd)
+                   for cid in sampled}
+        # (1) broadcast precedes failure: downlink bytes are spent for
+        # every dispatched client, at that client's rank
+        down_bytes = sum(self._downlink_bytes(r) for r in rank_of.values())
 
         survivors = [int(cid) for cid in sampled
                      if self.rng.random() >= scfg.p_client_failure]
         if not survivors:
+            # an all-dropout round still consumed its downlinks; record
+            # it so history (and TCC curves) never have gaps
             self.round += 1
-            return {"round": self.round, "n_agg": 0}
+            self._tcc_cum += down_bytes
+            rec = {"round": self.round, "n_agg": 0,
+                   "n_dropped": k_dispatch, "n_straggled": 0,
+                   "client_loss": float("nan"), "cohort_ranks": {},
+                   "down_bytes": down_bytes, "up_bytes": 0,
+                   "round_bytes": down_bytes, "tcc_bytes": self._tcc_cum}
+            self.history.append(rec)
+            if self.ckpt and self.round % self.scfg.checkpoint_every == 0:
+                self.save()
+            return rec
 
-        # (2) local training: the whole surviving cohort runs as ONE
-        # jitted vmapped program over stacked batches (fixed schedule
-        # length; per-client n_steps mask)
-        datas = [self.client_data[cid] for cid in survivors]
-        batches, n_steps = stack_cohort_batches(
-            self.rng, datas, self.ccfg, steps=self.cohort_schedule_steps)
-        batches = jax.tree.map(jnp.asarray, batches)
-        trained, losses = self.trainer(self.frozen, g_bcast, batches,
-                                       jnp.asarray(n_steps))
-        losses = np.asarray(losses)
-
-        # (3) uplink: each client emits its PACKED wire message
+        # (2)+(3) RANK-BUCKETED ENGINE: survivors group by adapter rank;
+        # each bucket's local runs execute as ONE jitted vmapped program
+        # (pow2-padded client dim, per-client n_steps mask), then every
+        # client emits its PACKED wire message at its own rank
+        buckets: dict[int, list[int]] = {}
+        for cid in survivors:
+            buckets.setdefault(rank_of[cid], []).append(cid)
+        latency = {cid: self.rng.exponential(1.0) for cid in survivors}
         ef = isinstance(self.aggregator, ErrorFeedbackFedAvg)
         results = []
-        for k, cid in enumerate(survivors):
-            t_k = jax.tree.map(lambda x: x[k], trained)
-            res = self.aggregator.residual(cid, t_k) if ef else None
-            msg, res = flocora.client_uplink(t_k, fcfg, res)
-            if ef:
-                self.aggregator.store_residual(cid, res)
-            latency = self.rng.exponential(1.0)  # simulated arrival time
-            n_i = len(next(iter(datas[k].values())))
-            results.append((latency, n_i, msg, float(losses[k])))
+        for r in sorted(buckets):
+            cids = buckets[r]
+            g_bcast = flocora.broadcast(self.global_train, fcfg,
+                                        rank=self._bcast_rank(r))
+            datas = [self.client_data[cid] for cid in cids]
+            batches, n_steps = stack_cohort_batches(
+                self.rng, datas, self.ccfg,
+                steps=self.cohort_schedule_steps)
+            if self.rank_schedule is not None:
+                # pow2-padded buckets bound compile count for mixed
+                # fleets; uniform fleets keep the exact-K classic shape
+                batches, n_steps = pad_cohort_batches(
+                    batches, n_steps, pow2_pad(len(cids)))
+            batches = jax.tree.map(jnp.asarray, batches)
+            trained, losses = self.trainer(self.frozen, g_bcast, batches,
+                                           jnp.asarray(n_steps))
+            losses = np.asarray(losses)
+            for k, cid in enumerate(cids):
+                t_k = jax.tree.map(lambda x: x[k], trained)
+                res = self.aggregator.residual(cid, t_k) if ef else None
+                msg, res = flocora.client_uplink(t_k, fcfg, res)
+                if ef:
+                    self.aggregator.store_residual(cid, res)
+                n_i = len(next(iter(datas[k].values())))
+                results.append((latency[cid], n_i, msg,
+                                float(losses[k]), r))
+
+        # every survivor transmitted its uplink (stragglers included)
+        up_bytes = sum(self._uplink_bytes(r[4], r[2]) for r in results)
 
         # straggler policy: first K arrivals win
         results.sort(key=lambda r: r[0])
         kept = results[:k_target]
         weights = jnp.asarray([r[1] for r in kept], jnp.float32)
         # (4) aggregation strategy; packed inputs lower onto the fused
-        # dequant+reduce kernel
+        # dequant+reduce kernel, per rank bucket when the cohort is mixed
         self.global_train = self.aggregator.aggregate(
             [r[2] for r in kept], weights)
         self.round += 1
 
-        if self._up_bytes_measured is None and fcfg.qcfg.enabled:
-            self._up_bytes_measured = messages.packed_wire_bytes(kept[0][2])
+        self._tcc_cum += down_bytes + up_bytes
+        kept_ranks: dict[int, int] = {}
+        for r in kept:
+            kept_ranks[r[4]] = kept_ranks.get(r[4], 0) + 1
         rec = {"round": self.round, "n_agg": len(kept),
                "n_dropped": k_dispatch - len(results),
                "n_straggled": len(results) - len(kept),
                "client_loss": float(np.mean([r[3] for r in kept])),
-               # Eq. 2 incl. the shared-once initial model
-               "tcc_bytes": self.initial_model_bytes
-               + self.round * self.round_bytes_per_client}
-        if self._up_bytes_measured is not None:
-            rec["up_bytes_measured"] = self._up_bytes_measured
+               "cohort_ranks": kept_ranks,
+               "down_bytes": down_bytes, "up_bytes": up_bytes,
+               "round_bytes": down_bytes + up_bytes,
+               # measured heterogeneous sums, incl. the shared-once
+               # initial model (replaces Eq. 2's 2 * one_way * rounds)
+               "tcc_bytes": self._tcc_cum}
+        if fcfg.qcfg.enabled:
+            rec["up_bytes_measured"] = self._uplink_bytes(
+                max(kept_ranks, key=kept_ranks.get))
+            rec["up_bytes_by_rank"] = dict(self._up_bytes_by_rank)
         if self.eval_fn and self.round % self.scfg.eval_every == 0:
             rec.update(self.eval_fn(self.frozen, self.global_train))
         self.history.append(rec)

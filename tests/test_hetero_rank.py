@@ -1,0 +1,497 @@
+"""Heterogeneous-rank federation: rank resize utilities, the rank-tagged
+wire header, rank-bucketed aggregation (zero-pad FedAvg on the fused
+kernel per bucket + FLoRIST-style SVD recombination), and the
+rank-bucketed FL engine end-to-end on a mixed r in {4, 8, 16, 32}
+cohort."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import aggregation, flocora, lora, messages
+from repro.core.aggregation import ErrorFeedbackFedAvg, FedAvgAggregator, \
+    SVDRecombinationAggregator
+from repro.core.flocora import FLoCoRAConfig, RankSchedule
+from repro.core.lora import LoRAConfig, linear_apply, linear_init
+from repro.core.quant import QuantConfig
+from repro.fl import ClientConfig, FLServer, ServerConfig
+from repro.fl.client import pad_cohort_batches, pow2_pad
+
+TIERS = (4, 8, 16, 32)
+
+
+def _dense_pair(seed, rank, d_in=16, d_out=12):
+    k = jax.random.PRNGKey(seed)
+    ad = lora.dense_lora_init(k, d_in, d_out,
+                              LoRAConfig(rank=rank, alpha=16.0 * rank))
+    return {"a": ad["a"],
+            "b": jax.random.normal(jax.random.fold_in(k, 1),
+                                   ad["b"].shape) * 0.1}
+
+
+def _conv_pair(seed, rank, cin=5, cout=7):
+    k = jax.random.PRNGKey(seed)
+    ad = lora.conv_lora_init(k, 3, 3, cin, cout,
+                             LoRAConfig(rank=rank, alpha=16.0 * rank))
+    return {"b": ad["b"],
+            "a": jax.random.normal(jax.random.fold_in(k, 1),
+                                   ad["a"].shape) * 0.1}
+
+
+def _client_tree(seed, rank):
+    return {"lin": _dense_pair(seed, rank),
+            "conv": _conv_pair(seed + 100, rank),
+            "norm": jax.random.normal(jax.random.PRNGKey(seed + 200), (5,))}
+
+
+# ---------------------------------------------------------------------------
+# resize utilities
+# ---------------------------------------------------------------------------
+
+def test_pad_preserves_product_dense_and_conv():
+    d = _dense_pair(0, 8)
+    p = lora.pad_adapter(d, 32)
+    assert lora.adapter_rank(p) == 32
+    np.testing.assert_allclose(np.asarray(p["a"] @ p["b"]),
+                               np.asarray(d["a"] @ d["b"]), atol=1e-6)
+    c = _conv_pair(0, 8)
+    pc = lora.pad_adapter(c, 32)
+    ref = jnp.einsum("hwir,xyro->hwio", c["b"], c["a"])
+    got = jnp.einsum("hwir,xyro->hwio", pc["b"], pc["a"])
+    np.testing.assert_allclose(np.asarray(got), np.asarray(ref), atol=1e-6)
+
+
+def test_slice_inverts_pad():
+    d = _dense_pair(1, 8)
+    back = lora.slice_adapter(lora.pad_adapter(d, 16), 8)
+    np.testing.assert_array_equal(np.asarray(back["a"]),
+                                  np.asarray(d["a"]))
+    np.testing.assert_array_equal(np.asarray(back["b"]),
+                                  np.asarray(d["b"]))
+
+
+def test_truncate_adapter_is_best_rank_r_approx():
+    d = _dense_pair(2, 16)
+    a_t, b_t = lora.truncate_adapter(d["a"], d["b"], 4)
+    assert a_t.shape == (16, 4) and b_t.shape == (4, 12)
+    u, s, vh = np.linalg.svd(np.asarray(d["a"] @ d["b"]),
+                             full_matrices=False)
+    best = (u[:, :4] * s[:4]) @ vh[:4]
+    np.testing.assert_allclose(np.asarray(a_t @ b_t), best, atol=1e-5)
+
+
+def test_truncate_beyond_intrinsic_rank_pads_zero():
+    """r_target above min(d_in, d_out): extra components are zero and
+    the product is reproduced exactly."""
+    d = _dense_pair(3, 32)                     # product rank <= 12
+    a_t, b_t = lora.truncate_adapter(d["a"], d["b"], 16)
+    assert a_t.shape == (16, 16) and b_t.shape == (16, 12)
+    np.testing.assert_allclose(np.asarray(a_t @ b_t),
+                               np.asarray(d["a"] @ d["b"]), atol=1e-4)
+
+
+def test_resize_tree_walks_pairs_only():
+    t = _client_tree(0, 8)
+    up = lora.resize_tree_rank(t, 32)
+    assert lora.tree_ranks(up) == (32,)
+    np.testing.assert_array_equal(np.asarray(up["norm"]),
+                                  np.asarray(t["norm"]))
+    down = lora.resize_tree_rank(up, 8)
+    np.testing.assert_allclose(np.asarray(down["lin"]["a"]),
+                               np.asarray(t["lin"]["a"]), atol=1e-6)
+
+
+def test_svd_energy_rank_ignores_zero_stack_slices():
+    """A fresh (all-zero delta) layer inside a stacked adapter must not
+    force the served rank to full through the batch max."""
+    sv = jnp.asarray([[10.0, 1.0, 0.01], [0.0, 0.0, 0.0]])
+    assert lora.svd_energy_rank(sv, 0.995) == 2
+    assert lora.svd_energy_rank(jnp.zeros((2, 3)), 0.99) == 1
+
+
+def test_resize_zero_product_slice_keeps_gradient_path():
+    """Fresh adapters (b = 0) must NOT truncate to all-zero factors —
+    an SVD of the zero product would; slicing keeps a's columns."""
+    k = jax.random.PRNGKey(0)
+    fresh = lora.dense_lora_init(k, 16, 12, LoRAConfig(rank=32, alpha=512.0))
+    cut = lora.resize_adapter(fresh, 4, method="slice")
+    assert float(jnp.max(jnp.abs(cut["a"]))) > 0.0
+
+
+# ---------------------------------------------------------------------------
+# rank schedule + wire header
+# ---------------------------------------------------------------------------
+
+def test_rank_schedule_tiered_and_annealing():
+    s = RankSchedule.tiered(TIERS, 10)
+    assert s.client_ranks[:5] == (4, 8, 16, 32, 4)
+    assert s.max_rank == 32
+    sa = RankSchedule.tiered((8, 32), 4, anneal_every=3,
+                             anneal_factor=0.5, min_rank=2)
+    assert sa.ranks_at(0) == (8, 32, 8, 32)
+    assert sa.ranks_at(3) == (4, 16, 4, 16)
+    assert sa.ranks_at(30) == (2, 2, 2, 2)     # floored at min_rank
+    # the floor only binds annealed shrinkage, not configured base ranks
+    assert RankSchedule.uniform(1, 2).rank_for(0) == 1
+    with pytest.raises(ValueError):
+        RankSchedule(client_ranks=())
+    with pytest.raises(ValueError):
+        RankSchedule(client_ranks=(4, 0))
+    with pytest.raises(ValueError):             # rank-0 floor under anneal
+        RankSchedule(client_ranks=(4, 8), anneal_every=1, min_rank=0)
+    with pytest.raises(ValueError):             # schedule above server rank
+        FLoCoRAConfig(rank=8, rank_schedule=RankSchedule.uniform(16, 4))
+
+
+def test_wire_header_carries_rank():
+    t = _client_tree(0, 16)
+    msg = messages.pack_message(t, QuantConfig(bits=4))
+    wire = messages.message_to_wire(msg)
+    name, bufs = wire[0]
+    assert name == messages.HEADER_KEY
+    assert bufs["header"].nbytes == messages.HEADER_BYTES
+    hdr = messages.parse_wire_header(bufs["header"])
+    assert hdr["rank"] == 16 and hdr["bits"] == 4
+    # fp message: rank still tagged, bits is None
+    hdr_fp = messages.parse_wire_header(
+        messages.message_to_wire(t)[0][1]["header"])
+    assert hdr_fp["rank"] == 16 and hdr_fp["bits"] is None
+    with pytest.raises(ValueError):
+        messages.parse_wire_header(np.zeros(4, np.uint32))
+    # the header is framing: payload accounting is unchanged
+    assert messages.packed_wire_bytes(msg) == \
+        messages.message_wire_bytes(t, QuantConfig(bits=4))
+
+
+def test_client_wire_bytes_scales_with_rank():
+    g = _client_tree(0, 32)
+    cfg = FLoCoRAConfig(rank=32, alpha=512.0, quant_bits=8)
+    sizes = [flocora.client_wire_bytes(g, cfg, r) for r in TIERS]
+    assert sizes == sorted(sizes) and sizes[0] < sizes[-1]
+    sched = RankSchedule.tiered(TIERS, 8)
+    hcfg = FLoCoRAConfig(rank=32, alpha=512.0, quant_bits=8,
+                         rank_schedule=sched)
+    fleet = flocora.fleet_tcc_bytes(g, hcfg, 3)
+    per = [flocora.client_wire_bytes(g, hcfg, r)
+           for r in sched.client_ranks]
+    assert fleet == 2 * 3 * sum(per)
+
+
+# ---------------------------------------------------------------------------
+# rank-bucketed aggregation
+# ---------------------------------------------------------------------------
+
+def _mixed_cohort(ranks=(4, 8, 8, 16, 32)):
+    trees = [_client_tree(i, r) for i, r in enumerate(ranks)]
+    w = jnp.asarray([1.0, 2.0, 3.0, 1.5, 0.5][: len(ranks)])
+    return trees, w
+
+
+def test_bucket_by_rank():
+    trees, _ = _mixed_cohort()
+    assert aggregation.bucket_by_rank(trees) == {4: [0], 8: [1, 2],
+                                                 16: [3], 32: [4]}
+
+
+def test_hetero_fedavg_fp_equals_zero_pad_reference():
+    trees, w = _mixed_cohort()
+    got = FedAvgAggregator(QuantConfig(), r_target=32).aggregate(trees, w)
+    padded = [lora.resize_tree_rank(t, 32) for t in trees]
+    ref = aggregation.fedavg(aggregation.stack_trees(padded), w)
+    for a, b in zip(jax.tree.leaves(got), jax.tree.leaves(ref)):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                                   rtol=1e-5, atol=1e-6)
+
+
+@pytest.mark.parametrize("bits", [8, 4])
+def test_hetero_fedavg_packed_equals_fp_reference(bits):
+    """ACCEPTANCE: per-bucket packed aggregation (fused dequant_agg
+    kernel per rank bucket) is numerically equal to the fp reference
+    (dequantized zero-padded weighted mean)."""
+    trees, w = _mixed_cohort()
+    qcfg = QuantConfig(bits=bits)
+    msgs = [messages.pack_message(t, qcfg) for t in trees]
+    got = FedAvgAggregator(qcfg, r_target=32).aggregate(msgs, w)
+    rts = [lora.resize_tree_rank(messages.unpack_message(m), 32)
+           for m in msgs]
+    ref = aggregation.fedavg(aggregation.stack_trees(rts), w)
+    for a, b in zip(jax.tree.leaves(got), jax.tree.leaves(ref)):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                                   rtol=1e-4, atol=1e-5)
+
+
+def test_svd_recombination_served_rank_and_reconstruction():
+    """ACCEPTANCE: served rank <= max client rank; the served factors
+    reconstruct the aggregated delta within the energy tolerance."""
+    trees, w = _mixed_cohort()
+    qcfg = QuantConfig(bits=8)
+    msgs = [messages.pack_message(t, qcfg) for t in trees]
+    agg = SVDRecombinationAggregator(qcfg, r_target=32, energy=0.999)
+    got = agg.aggregate(msgs, w)
+    assert set(agg.served_ranks) == {"lin", "conv"}
+    assert all(1 <= r <= 32 for r in agg.served_ranks.values())
+    # global tree shape pinned at r_target
+    assert lora.tree_ranks(got) == (32,)
+    # reconstruction: served product ~= weighted mean of client products
+    wn = np.asarray(w / jnp.sum(w))
+    rts = [messages.unpack_message(m) for m in msgs]
+    ref = sum(wk * np.asarray(t["lin"]["a"].astype(jnp.float32)
+                              @ t["lin"]["b"].astype(jnp.float32))
+              for wk, t in zip(wn, rts))
+    got_d = np.asarray(got["lin"]["a"] @ got["lin"]["b"])
+    err = np.abs(got_d - ref).max()
+    assert err <= max(1e-5, 0.05 * np.abs(ref).max()), err
+    # non-adapter leaves match the plain weighted mean
+    ref_norm = sum(wk * np.asarray(t["norm"]) for wk, t in zip(wn, rts))
+    np.testing.assert_allclose(np.asarray(got["norm"]), ref_norm,
+                               rtol=1e-5, atol=1e-6)
+
+
+def test_uniform_cohort_keeps_fast_path():
+    """A uniform-rank cohort must reproduce the classic (non-bucketed)
+    packed FedAvg bit-for-bit."""
+    trees = [_client_tree(i, 8) for i in range(3)]
+    w = jnp.asarray([1.0, 2.0, 1.0])
+    qcfg = QuantConfig(bits=8)
+    msgs = [messages.pack_message(t, qcfg) for t in trees]
+    got = FedAvgAggregator(qcfg, r_target=8).aggregate(msgs, w)
+    ref = aggregation.fedavg_packed(msgs, w)
+    for a, b in zip(jax.tree.leaves(got), jax.tree.leaves(ref)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_ef_residual_reinit_on_rank_change():
+    agg = ErrorFeedbackFedAvg(QuantConfig(bits=8), r_target=16)
+    t8 = _client_tree(0, 8)
+    agg.store_residual(3, jax.tree.map(
+        lambda x: jnp.ones_like(x, jnp.float32), t8))
+    # same shapes -> stored residual comes back
+    got = agg.residual(3, t8)
+    assert float(jnp.max(jax.tree.leaves(got)[0])) == 1.0
+    # rank annealed 8 -> 4: stale residual must restart at zero
+    t4 = lora.resize_tree_rank(t8, 4)
+    got4 = agg.residual(3, t4)
+    assert all(float(jnp.max(jnp.abs(l))) == 0.0
+               for l in jax.tree.leaves(got4))
+
+
+# ---------------------------------------------------------------------------
+# rank-bucketed FL engine end-to-end
+# ---------------------------------------------------------------------------
+
+SCALE = 1.0
+
+
+def _lora_model(seed=0, rank=32):
+    k = jax.random.PRNGKey(seed)
+    fz, tr = linear_init(k, 16, 10, "lora",
+                         LoRAConfig(rank=rank, alpha=float(rank)),
+                         base_dtype=jnp.float32)
+    return {"frozen": {"lin": fz},
+            "train": {"lin": tr, "bias": jnp.zeros((10,))}}
+
+
+def _lora_loss(frozen, train, batch):
+    logits = linear_apply(frozen["lin"], train["lin"], batch["x"], SCALE,
+                          jnp.float32) + train["bias"]
+    logp = jax.nn.log_softmax(logits)
+    return -jnp.mean(jnp.take_along_axis(logp, batch["y"][:, None],
+                                         axis=1)), {}
+
+
+def _lin_data(n=240, n_clients=10, seed=0):
+    rng = np.random.default_rng(seed)
+    w_true = rng.normal(size=(16, 10)).astype(np.float32)
+    x = rng.normal(size=(n, 16)).astype(np.float32)
+    y = np.argmax(x @ w_true + 0.1 * rng.normal(size=(n, 10)),
+                  axis=1).astype(np.int32)
+    parts = np.array_split(rng.permutation(n), n_clients)
+    return [{"x": x[p], "y": y[p]} for p in parts]
+
+
+def _hetero_server(data, sched, rank=32, **kw):
+    fcfg = FLoCoRAConfig(rank=rank, alpha=float(rank), quant_bits=8,
+                         rank_schedule=sched, **kw)
+    return FLServer(_lora_model(rank=rank), _lora_loss, data,
+                    ServerConfig(rounds=3, n_clients=len(data),
+                                 clients_per_round=6),
+                    ClientConfig(local_epochs=2, batch_size=8, lr=0.1),
+                    fcfg)
+
+
+def test_mixed_rank_cohort_trains_end_to_end():
+    """ACCEPTANCE: a mixed r in {4, 8, 16, 32} cohort trains end-to-end
+    through the packed wire path; tcc_bytes equals the running sum of
+    measured per-client packed message sizes."""
+    data = _lin_data()
+    srv = _hetero_server(data, RankSchedule.tiered(TIERS, 10))
+    hist = srv.run(3)
+    assert any(len(h["cohort_ranks"]) > 1 for h in hist)
+    assert hist[-1]["client_loss"] < hist[0]["client_loss"]
+    # the global tree stays at the server rank
+    assert lora.tree_ranks(srv.global_train) == (32,)
+    # measured per-rank uplink sizes match an independently-built packed
+    # message of that rank
+    for r, got in hist[-1]["up_bytes_by_rank"].items():
+        g_r = lora.resize_tree_rank(jax.device_get(srv.global_train), r)
+        expect = messages.packed_wire_bytes(
+            messages.pack_message(g_r, srv.fcfg.qcfg))
+        assert got == expect, (r, got, expect)
+    # TCC is the running sum of measured round bytes + initial model
+    assert hist[-1]["tcc_bytes"] == srv.initial_model_bytes + \
+        sum(h["round_bytes"] for h in hist)
+
+
+def test_full_cohort_tcc_equals_per_client_measured_sum():
+    """With every client dispatched, one round's down/up bytes are the
+    sums over the schedule's per-client measured message sizes."""
+    data = _lin_data()
+    sched = RankSchedule.tiered(TIERS, 10)
+    srv = _hetero_server(data, sched)
+    srv.scfg = ServerConfig(rounds=1, n_clients=10, clients_per_round=10)
+    rec = srv.run_round()
+    per_client = [
+        messages.packed_wire_bytes(flocora.server_downlink(
+            srv.global_train, srv.fcfg, rank=r))
+        for r in sched.client_ranks]
+    assert rec["down_bytes"] == sum(per_client)
+    assert rec["up_bytes"] == sum(per_client)
+
+
+def test_svd_recombination_server_end_to_end():
+    data = _lin_data()
+    sched = RankSchedule.tiered(TIERS, 10)
+    fcfg = FLoCoRAConfig(rank=32, alpha=32.0, quant_bits=8,
+                         rank_schedule=sched)
+    srv = FLServer(_lora_model(rank=32), _lora_loss, data,
+                   ServerConfig(rounds=3, n_clients=10,
+                                clients_per_round=6),
+                   ClientConfig(local_epochs=2, batch_size=8, lr=0.1),
+                   fcfg,
+                   aggregator=SVDRecombinationAggregator(
+                       QuantConfig(bits=8), energy=0.99))
+    hist = srv.run(3)
+    assert srv.aggregator.served_ranks
+    assert all(1 <= r <= 32 for r in srv.aggregator.served_ranks.values())
+    assert hist[-1]["client_loss"] < hist[0]["client_loss"]
+
+
+def test_rank_annealing_shrinks_wire():
+    data = _lin_data()
+    sched = RankSchedule.tiered((16, 32), 10, anneal_every=2,
+                                anneal_factor=0.5, min_rank=4)
+    srv = _hetero_server(data, sched)
+    hist = srv.run(4)
+    first = max(max(h["cohort_ranks"]) for h in hist[:2])
+    last = max(max(h["cohort_ranks"]) for h in hist[-2:])
+    assert last < first
+    assert hist[-1]["round_bytes"] < hist[0]["round_bytes"]
+    assert np.isfinite(hist[-1]["client_loss"])
+
+
+def test_all_dropout_round_recorded():
+    """SATELLITE: an all-dropout round appends a history record with
+    n_agg=0 and correct (downlink-only) TCC — no gaps."""
+    data = _lin_data()
+    srv = _hetero_server(data, RankSchedule.tiered(TIERS, 10))
+    srv.scfg = ServerConfig(rounds=2, n_clients=10, clients_per_round=4,
+                            p_client_failure=1.0)
+    hist = srv.run(2)
+    assert len(srv.history) == 2
+    assert all(h["n_agg"] == 0 and h["up_bytes"] == 0 for h in hist)
+    assert all(h["down_bytes"] > 0 for h in hist)
+    # schema matches normal records: loss is NaN (no data), ranks empty
+    assert all(np.isnan(h["client_loss"]) and h["cohort_ranks"] == {}
+               for h in hist)
+    assert hist[1]["tcc_bytes"] == srv.initial_model_bytes + \
+        hist[0]["round_bytes"] + hist[1]["round_bytes"]
+
+
+def test_non_hetero_aggregator_rejected_for_mixed_schedule():
+    """FedBuff has no rank-bucketed path: a mixed-rank schedule must be
+    rejected at construction, not crash with a shape error mid-round."""
+    from repro.core.aggregation import FedBuffAggregator
+    data = _lin_data()
+    fcfg = FLoCoRAConfig(rank=32, alpha=32.0, quant_bits=8,
+                         rank_schedule=RankSchedule.tiered(TIERS, 10))
+    with pytest.raises(ValueError):
+        FLServer(_lora_model(rank=32), _lora_loss, data,
+                 ServerConfig(rounds=1, n_clients=10,
+                              clients_per_round=4),
+                 ClientConfig(), fcfg, aggregator=FedBuffAggregator())
+    # explicit r_target below the schedule max would let the global
+    # tree's rank float round-to-round — also rejected at init
+    with pytest.raises(ValueError):
+        FLServer(_lora_model(rank=32), _lora_loss, data,
+                 ServerConfig(rounds=1, n_clients=10,
+                              clients_per_round=4),
+                 ClientConfig(), fcfg,
+                 aggregator=FedAvgAggregator(QuantConfig(bits=8),
+                                             r_target=4))
+
+
+def test_server_copy_does_not_alias_caller_aggregator():
+    """Pinning r_target must not mutate (or alias mutable state of) a
+    caller-provided aggregator instance."""
+    data = _lin_data()
+    caller = ErrorFeedbackFedAvg(QuantConfig(bits=8))
+    assert caller.r_target is None
+    fcfg = FLoCoRAConfig(rank=8, alpha=8.0, quant_bits=8,
+                         error_feedback=True)
+    srv = FLServer(_lora_model(rank=8), _lora_loss, data,
+                   ServerConfig(rounds=1, n_clients=10,
+                                clients_per_round=3),
+                   ClientConfig(local_epochs=1, batch_size=8, lr=0.1),
+                   fcfg, aggregator=caller)
+    srv.run(1)
+    assert caller.r_target is None          # caller untouched
+    assert srv.aggregator.residuals and not caller.residuals
+
+
+def test_pow2_padding_helpers():
+    assert [pow2_pad(k) for k in (1, 2, 3, 5, 8, 9)] == [1, 2, 4, 8, 8, 16]
+    batches = {"x": np.ones((3, 4, 2)), "y": np.zeros((3, 4), np.int32)}
+    n_steps = np.asarray([4, 2, 4], np.int32)
+    pb, pn = pad_cohort_batches(batches, n_steps, 4)
+    assert pb["x"].shape == (4, 4, 2) and pn.tolist() == [4, 2, 4, 0]
+    np.testing.assert_array_equal(pb["x"][3], pb["x"][0])
+    # no-op when already big enough
+    pb2, pn2 = pad_cohort_batches(batches, n_steps, 2)
+    assert pb2 is batches and pn2 is n_steps
+
+
+def test_resume_restores_cumulative_tcc(tmp_path):
+    """Measured TCC must survive checkpoint/resume: a restarted server's
+    history continues the byte counter instead of restarting it."""
+    data = _lin_data()
+    sched = RankSchedule.tiered(TIERS, 10)
+    fcfg = FLoCoRAConfig(rank=32, alpha=32.0, quant_bits=8,
+                         rank_schedule=sched)
+    scfg = ServerConfig(rounds=2, n_clients=10, clients_per_round=6,
+                        checkpoint_dir=str(tmp_path), checkpoint_every=1)
+    ccfg = ClientConfig(local_epochs=1, batch_size=8, lr=0.1)
+    srv = FLServer(_lora_model(rank=32), _lora_loss, data, scfg, ccfg,
+                   fcfg)
+    hist = srv.run(2)
+    srv2 = FLServer(_lora_model(rank=32), _lora_loss, data, scfg, ccfg,
+                    fcfg)
+    assert srv2.try_resume()
+    rec = srv2.run_round()
+    assert rec["tcc_bytes"] == hist[-1]["tcc_bytes"] + rec["round_bytes"]
+
+
+def test_uniform_server_unchanged_by_refactor():
+    """No rank_schedule: the classic single-program cohort engine and
+    per-round accounting still hold (regression guard)."""
+    data = _lin_data()
+    fcfg = FLoCoRAConfig(rank=8, alpha=8.0, quant_bits=8)
+    srv = FLServer(_lora_model(rank=8), _lora_loss, data,
+                   ServerConfig(rounds=2, n_clients=10,
+                                clients_per_round=4),
+                   ClientConfig(local_epochs=1, batch_size=8, lr=0.1),
+                   fcfg)
+    hist = srv.run(2)
+    one_way = messages.message_wire_bytes(srv.global_train, fcfg.qcfg)
+    assert srv.round_bytes_per_client == 2 * one_way
+    assert all(h["cohort_ranks"] == {8: 4} for h in hist)
+    assert all(h["round_bytes"] == 4 * 2 * one_way for h in hist)

@@ -218,13 +218,20 @@ def test_server_round_packed_end_to_end(bits):
 
 
 def test_server_tcc_includes_initial_model():
+    """TCC sums MEASURED per-client message bytes over the fleet (each
+    round: K clients x (down + up)), plus the shared-once initial model."""
     data, model = _tiny_setup()
     srv = _tiny_server(data, model)
     hist = srv.run(2)
+    k = 2                                      # clients_per_round, no drop
+    assert hist[0]["round_bytes"] == k * srv.round_bytes_per_client
     assert hist[0]["tcc_bytes"] == \
-        srv.initial_model_bytes + srv.round_bytes_per_client
+        srv.initial_model_bytes + k * srv.round_bytes_per_client
     assert hist[1]["tcc_bytes"] == \
-        srv.initial_model_bytes + 2 * srv.round_bytes_per_client
+        srv.initial_model_bytes + 2 * k * srv.round_bytes_per_client
+    # cumulative over history: init + running sum of per-round bytes
+    assert hist[1]["tcc_bytes"] == srv.initial_model_bytes + \
+        sum(h["round_bytes"] for h in hist)
 
 
 def test_server_checkpoint_resume_exact_with_json_rng(tmp_path):

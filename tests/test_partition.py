@@ -1,0 +1,56 @@
+"""LDA (Dirichlet) client partitioning: determinism, exact coverage,
+and bounded termination of the min_size retry loop."""
+import numpy as np
+import pytest
+
+from repro.data import lda_partition
+
+
+def _labels(n=600, n_classes=10, seed=0):
+    return np.random.default_rng(seed).integers(0, n_classes, n)
+
+
+def test_lda_seeded_determinism():
+    y = _labels()
+    a = lda_partition(y, 8, alpha=0.5, seed=7)
+    b = lda_partition(y, 8, alpha=0.5, seed=7)
+    assert len(a) == len(b) == 8
+    for pa, pb in zip(a, b):
+        np.testing.assert_array_equal(pa, pb)
+    # a different seed gives a different split
+    c = lda_partition(y, 8, alpha=0.5, seed=8)
+    assert any(len(pa) != len(pc) or not np.array_equal(pa, pc)
+               for pa, pc in zip(a, c))
+
+
+@pytest.mark.parametrize("alpha", [0.1, 0.5, 10.0])
+def test_lda_covers_every_index_exactly_once(alpha):
+    y = _labels()
+    parts = lda_partition(y, 12, alpha=alpha, seed=3)
+    allidx = np.concatenate(parts)
+    assert len(allidx) == len(y)
+    np.testing.assert_array_equal(np.sort(allidx), np.arange(len(y)))
+
+
+def test_lda_min_size_respected():
+    y = _labels()
+    parts = lda_partition(y, 10, alpha=0.5, seed=0, min_size=4)
+    assert min(len(p) for p in parts) >= 4
+
+
+def test_lda_adversarial_alpha_terminates():
+    """Tiny alpha concentrates classes on single clients; the bounded
+    retry loop must still return a full partition meeting the floor."""
+    y = _labels(n=120, n_classes=3, seed=1)
+    parts = lda_partition(y, 20, alpha=1e-4, seed=0, min_size=2,
+                          max_retries=25)
+    assert len(parts) == 20
+    assert min(len(p) for p in parts) >= 2
+    allidx = np.concatenate(parts)
+    np.testing.assert_array_equal(np.sort(allidx), np.arange(len(y)))
+
+
+def test_lda_infeasible_min_size_raises():
+    y = _labels(n=30)
+    with pytest.raises(ValueError):
+        lda_partition(y, 20, alpha=0.5, min_size=2)
