@@ -20,9 +20,16 @@ jitted vmapped program over adapters truncated to its tier's rank, and
 the sweep reports bucketed clients/sec vs everyone-at-max-rank plus the
 measured per-tier wire bytes.
 
+``--async`` runs the EVENT-DRIVEN FedBuff engine (fl/async_engine.py)
+over a 2-tier fleet instead: steady-state arrivals/sec for
+event-at-a-time vs micro-batched execution (shared compiled trainer, so
+the delta is pure dispatch batching), compiled-program counts against
+the #ranks x log2(micro-batch) bound, and the wall-clock-vs-bytes
+trajectory (virtual seconds + measured TCC per flushed version).
+
     PYTHONPATH=src python -m benchmarks.round_throughput \
         [--clients 8] [--samples 64] [--iters 3] \
-        [--rank-profile 4,8,16,32]
+        [--rank-profile 4,8,16,32] | [--async [--arrivals 12]]
 """
 from __future__ import annotations
 
@@ -184,6 +191,54 @@ def run_rank_profile(profile: tuple[int, ...], n_clients: int = 6,
     return rows
 
 
+def run_async(n_clients: int = 8, samples_per_client: int = 48,
+              arrivals: int = 12) -> list[str]:
+    """Async FedBuff engine throughput + wall-clock-vs-bytes trajectory
+    on a 2-tier (r in {4, 8}) fleet."""
+    from repro.fl import AsyncConfig, AsyncFLServer, FleetTrace, \
+        LognormalLatency
+    from repro.fl.client import make_staggered_cohort_trainer
+
+    rows = []
+    _, datas, model, ccfg, lfn = _setup_fl(n_clients, samples_per_client,
+                                           rank=8)
+    sched = RankSchedule.tiered((4, 8), n_clients)
+    fcfg = FLoCoRAConfig(rank=8, alpha=128.0, quant_bits=8,
+                         rank_schedule=sched)
+    trace = FleetTrace(seed=0, latency=LognormalLatency(
+        compute_median_s=30.0, network_mbps=20.0))
+    # one shared compiled trainer: the eventwise/microbatch delta is
+    # pure dispatch batching, and the timed pass is post-compile
+    trainer = make_staggered_cohort_trainer(lfn, ccfg)
+
+    def engine(window: float) -> AsyncFLServer:
+        acfg = AsyncConfig(total_arrivals=arrivals, concurrency=4,
+                           buffer_size=6, microbatch_window=window,
+                           seed=0)
+        return AsyncFLServer(model, lfn, datas, acfg, ccfg, fcfg,
+                             trace=trace, trainer=trainer)
+
+    engine(600.0).run()      # one warmup: compiles the program superset
+    hist = None
+    for name, window in (("eventwise", 0.0), ("microbatch", 600.0)):
+        srv = engine(window)
+        t0 = time.perf_counter()
+        hist = srv.run()
+        dt = time.perf_counter() - t0
+        rows.append(f"round/async_{name}_n{arrivals},{dt * 1e6:.0f},"
+                    f"arrivals_per_sec={arrivals / dt:.2f} "
+                    f"programs={len(srv.program_keys)} "
+                    f"versions={srv.version}")
+    # wall-clock-vs-bytes trajectory of the micro-batched run
+    for h in hist:
+        rows.append(f"round/async_v{h['version']},0,"
+                    f"virtual_s={h['t_virtual']:.0f} "
+                    f"tcc_bytes={h['tcc_bytes']} "
+                    f"loss={h['client_loss']:.3f} "
+                    f"staleness_mean={h['staleness_mean']:.2f}")
+    return rows
+
+
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--clients", type=int, default=6)
@@ -192,10 +247,18 @@ def main() -> None:
     ap.add_argument("--rank-profile", type=str, default=None,
                     help="comma-separated rank tiers, e.g. 4,8,16,32: "
                          "sweep the rank-bucketed engine")
+    ap.add_argument("--async", dest="async_", action="store_true",
+                    help="event-driven FedBuff engine sweep")
+    ap.add_argument("--arrivals", type=int, default=12,
+                    help="virtual arrivals for the --async sweep")
     args = ap.parse_args()
     if args.clients < 1 or args.samples < 1 or args.iters < 1:
         ap.error("--clients/--samples/--iters must be >= 1")
-    if args.rank_profile:
+    if args.arrivals < 1:
+        ap.error("--arrivals must be >= 1")
+    if args.async_:
+        rows = run_async(args.clients, args.samples, args.arrivals)
+    elif args.rank_profile:
         try:
             profile = tuple(int(t) for t in args.rank_profile.split(","))
         except ValueError:

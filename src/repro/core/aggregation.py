@@ -151,7 +151,12 @@ def fedavg_hetero(msgs: list[Any], weights: Array, r_target: int) -> Any:
 
 
 # ---------------------------------------------------------------------------
-# Beyond-paper: async buffered aggregation (FedBuff)
+# Beyond-paper: async buffered aggregation (FedBuff).
+# fedbuff_init/add/flush are the INCREMENTAL fp reference implementation
+# of the buffered rule (one jittable add per arrival); the production
+# path is FedBuffAggregator's rank-bucketed add/flush, which defers the
+# reduction to one fused-kernel pass over the buffered packed messages.
+# Tier-1 cross-checks the shared discount formula between the two.
 # ---------------------------------------------------------------------------
 
 @dataclasses.dataclass
@@ -170,9 +175,18 @@ def fedbuff_init(like: Any) -> FedBuffState:
 
 
 def fedbuff_add(state: FedBuffState, update: Any, n_k: Array,
-                staleness: Array, half_life: float = 4.0) -> FedBuffState:
-    """Add one async client update with staleness-discounted weight
-    w = n_k * 2^(-staleness/half_life)."""
+                staleness: Array, half_life: float) -> FedBuffState:
+    """Add one async client update with the staleness-discounted weight
+
+        w = n_k * 2^(-staleness / half_life)
+
+    ``staleness`` is the server-version lag at arrival (global version
+    when the update is buffered minus the version the client trained
+    from); an update's influence HALVES for every ``half_life`` versions
+    the server advanced while the client was training (s=0 => w=n_k).
+    ``half_life`` has no default here — it is a config field, threaded
+    from ``ServerConfig.fedbuff_half_life`` / ``AsyncConfig.half_life``
+    through :class:`FedBuffAggregator`."""
     w = n_k.astype(jnp.float32) * jnp.exp2(-staleness.astype(jnp.float32)
                                            / half_life)
     buf = jax.tree.map(lambda b, u: b + w * u.astype(jnp.float32),
@@ -371,24 +385,83 @@ class SVDRecombinationAggregator(FedAvgAggregator):
         return lora.pad_adapter(served, lora.adapter_rank(base_pair))
 
 
+FEDBUFF_HALF_LIFE = 4.0   # fallback when no engine config threads one
+
+
 @dataclasses.dataclass
 class FedBuffAggregator:
-    """Buffered aggregation with staleness discounting. In the sync round
-    the straggler arrival rank plays the staleness role; ``add``/``flush``
-    expose the async interface directly."""
-    half_life: float = 4.0
+    """Buffered aggregation with staleness discounting (Nguyen et al.
+    '22). The discount is ``w = n_k * 2^(-staleness / half_life)``: an
+    update's influence halves for every ``half_life`` global versions of
+    server lag. ``half_life=None`` defers to the engine config
+    (``ServerConfig.fedbuff_half_life`` / ``AsyncConfig.half_life``) —
+    both engines thread it at construction.
+
+    Two interfaces over the same rule, both RANK-BUCKETED (mixed-rank
+    fleets bucket by adapter rank; packed buckets aggregate on the fused
+    ``dequant_agg`` kernel and zero-pad to ``r_target``):
+
+      * ``aggregate(msgs, weights)`` — the sync-round adapter: with
+        ``rank_staleness`` the arrival order WITHIN each rank bucket
+        plays the staleness role (straggler-rank staleness per bucket);
+      * ``add(msg, n_k, staleness)`` / ``flush()`` — the async buffered
+        interface driven by ``fl/async_engine.py``: packed wire messages
+        buffer with their discounted weights and one flush performs the
+        buffered packed sum in a single rank-bucketed fused pass.
+    """
+    half_life: Optional[float] = None
     rank_staleness: bool = False   # sync rounds: discount late arrivals
+    r_target: Optional[int] = None  # zero-pad target (engines pin this)
+    pending: list = dataclasses.field(default_factory=list)
+
+    def resolved_half_life(self) -> float:
+        return FEDBUFF_HALF_LIFE if self.half_life is None \
+            else float(self.half_life)
+
+    def discounted_weight(self, n_k: float, staleness: float) -> float:
+        """w = n_k * 2^(-staleness / half_life)."""
+        return float(n_k) * 2.0 ** (-float(staleness)
+                                    / self.resolved_half_life())
+
+    def _combine(self, msgs: list[Any], weights: Any) -> Any:
+        """Rank-bucketed discounted-weight mean over buffered messages."""
+        w = jnp.asarray(np.asarray(weights, np.float32))
+        ranks = {r for m in msgs
+                 if (r := lora.tree_max_rank(m)) is not None}
+        if ranks:
+            target = max(self.r_target or 0, max(ranks))
+            if len(ranks) > 1 or ranks != {target}:
+                return fedavg_hetero(msgs, w, target)
+        if message_is_packed(msgs[0]):
+            return fedavg_packed(msgs, w)
+        return fedavg(stack_trees(msgs), w)
 
     def aggregate(self, msgs: list[Any], weights: Array) -> Any:
-        trees = [messages.unpack_message(m) if message_is_packed(m) else m
-                 for m in msgs]
-        state = fedbuff_init(trees[0])
-        for rank, (tree, w) in enumerate(zip(trees, weights)):
-            stale = jnp.asarray(float(rank) if self.rank_staleness else 0.0)
-            state = fedbuff_add(state, tree, w, stale,
-                                half_life=self.half_life)
-        agg, _ = fedbuff_flush(state, trees[0])
-        return agg
+        stale = np.zeros(len(msgs), np.float32)
+        if self.rank_staleness:
+            for idxs in bucket_by_rank(msgs).values():
+                for pos, i in enumerate(idxs):
+                    stale[i] = float(pos)
+        w = np.asarray(weights, np.float32) \
+            * np.exp2(-stale / self.resolved_half_life())
+        return self._combine(msgs, w)
+
+    # -- async buffered interface (fl/async_engine.py) ----------------------
+    def add(self, msg: Any, n_k: float, staleness: float) -> int:
+        """Buffer one arrived (packed or fp) message with its
+        staleness-discounted weight; returns the buffer fill count."""
+        self.pending.append((msg, self.discounted_weight(n_k, staleness)))
+        return len(self.pending)
+
+    def flush(self) -> Any:
+        """Aggregate and clear the buffer: one rank-bucketed fused pass
+        over every buffered packed message."""
+        if not self.pending:
+            raise ValueError("FedBuff flush with an empty buffer")
+        msgs = [m for m, _ in self.pending]
+        w = np.asarray([wt for _, wt in self.pending], np.float32)
+        self.pending = []
+        return self._combine(msgs, w)
 
 
 @dataclasses.dataclass

@@ -135,7 +135,11 @@ def message_wire_bytes(tree: Any, cfg: QuantConfig) -> int:
 
 
 def tcc_bytes(tree: Any, cfg: QuantConfig, rounds: int) -> int:
-    """Paper Eq. 2 generalized: 2 * R * message_bytes."""
+    """Paper Eq. 2 generalized: 2 * R * message_bytes.
+
+    This is the CANONICAL total-communication-cost helper; the scalar
+    variant in ``repro.core.quant`` is a deprecated shim over the same
+    formula."""
     return 2 * rounds * message_wire_bytes(tree, cfg)
 
 

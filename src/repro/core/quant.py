@@ -173,6 +173,13 @@ def fp_tensor_bytes(shape: tuple[int, ...]) -> int:
 
 
 def tcc_bytes(message_bytes: int, rounds: int) -> int:
-    """Total communication cost for one client over `rounds` rounds
-    (down + up each round) — paper Eq. 2 generalized to mixed payloads."""
+    """DEPRECATED shim: the canonical TCC accounting is
+    ``repro.core.messages.tcc_bytes(tree, cfg, rounds)`` (tree-level,
+    same Eq. 2 formula). This scalar variant survives for old callers
+    only and will be removed."""
+    import warnings
+    warnings.warn(
+        "repro.core.quant.tcc_bytes is deprecated; use "
+        "repro.core.messages.tcc_bytes(tree, cfg, rounds)",
+        DeprecationWarning, stacklevel=2)
     return 2 * rounds * message_bytes

@@ -1,5 +1,9 @@
 from repro.fl.client import ClientConfig, make_local_trainer, \
-    make_cohort_trainer, stack_local_batches, stack_cohort_batches, \
-    pad_cohort_batches, pow2_pad
-from repro.fl.server import ServerConfig, FLServer
+    make_cohort_trainer, make_staggered_cohort_trainer, \
+    stack_local_batches, stack_cohort_batches, pad_cohort_batches, pow2_pad
+from repro.fl.server import ServerConfig, FLServer, WireAccounting
+from repro.fl.async_engine import AsyncConfig, AsyncFLServer, \
+    time_to_target
+from repro.fl.traces import AvailabilityWindows, FleetTrace, \
+    LognormalLatency
 from repro.fl.elastic import elastic_restore

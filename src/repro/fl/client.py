@@ -137,6 +137,20 @@ def make_cohort_trainer(loss_fn: Callable, cfg: ClientConfig):
                             in_axes=(None, None, 0, 0)))
 
 
+def make_staggered_cohort_trainer(loss_fn: Callable, cfg: ClientConfig):
+    """Async cohort engine: like ``make_cohort_trainer`` but ``train0``
+    carries a leading K dim — each client starts from its OWN adapter
+    tree (asynchronous arrivals trained from different global versions
+    batch into one program; see fl/async_engine.py).
+
+    Compilation caches on (adapter shapes, K, steps, B): the async
+    engine groups arrivals by rank and pads each group's client dim to a
+    pow2, so the compiled-program count stays bounded by
+    #distinct-ranks x log2(max micro-batch)."""
+    return jax.jit(jax.vmap(_masked_local_run(loss_fn, cfg),
+                            in_axes=(None, 0, 0, 0)))
+
+
 def stack_local_batches(rng: np.random.Generator, data: dict,
                         cfg: ClientConfig,
                         steps: Optional[int] = None) -> dict:

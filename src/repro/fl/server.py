@@ -40,7 +40,7 @@ import numpy as np
 
 from repro.core import flocora, messages
 from repro.core.aggregation import Aggregator, ErrorFeedbackFedAvg, \
-    FedAvgAggregator
+    FedAvgAggregator, FedBuffAggregator
 from repro.core.flocora import FLoCoRAConfig
 from repro.checkpoint import CheckpointManager
 from repro.fl.client import ClientConfig, cohort_steps, \
@@ -61,6 +61,47 @@ class ServerConfig:
     eval_every: int = 5
     checkpoint_dir: Optional[str] = None
     checkpoint_every: int = 25
+    # FedBuff staleness discount half-life (in staleness units: straggler
+    # arrival rank for sync rounds, global-version lag for async);
+    # threaded into a FedBuffAggregator whose half_life is unset
+    fedbuff_half_life: float = 4.0
+
+
+class WireAccounting:
+    """Measured per-rank wire-byte cache, shared by the sync
+    (:class:`FLServer`) and async (``fl/async_engine.AsyncFLServer``)
+    engines. Message size is shape-determined, so ONE measured emission
+    per rank is exact for the whole run; the uplink re-measure
+    cross-checks that EF/quant/rank changes never desynchronize the
+    accounting."""
+
+    def __init__(self, fcfg: FLoCoRAConfig):
+        self.fcfg = fcfg
+        self.down: dict[int, int] = {}
+        self.up: dict[int, int] = {}
+
+    def bcast_rank(self, rank: int) -> Optional[int]:
+        """None keeps the uniform fleet's broadcast byte-identical to the
+        classic path (no resize walk)."""
+        return rank if self.fcfg.rank_schedule is not None else None
+
+    def downlink_bytes(self, global_train: Any, rank: int) -> int:
+        got = self.down.get(rank)
+        if got is None:
+            msg = flocora.server_downlink(global_train, self.fcfg,
+                                          self.bcast_rank(rank))
+            got = messages.packed_wire_bytes(msg)
+            self.down[rank] = got
+        return got
+
+    def uplink_bytes(self, rank: int, msg: Any = None) -> Optional[int]:
+        """None when no uplink was emitted at this rank yet (callers
+        fall back to the symmetric downlink size)."""
+        got = self.up.get(rank)
+        if got is None and msg is not None:
+            got = messages.packed_wire_bytes(msg)
+            self.up[rank] = got
+        return got
 
 
 class FLServer:
@@ -113,18 +154,29 @@ class FLServer:
                             "an ErrorFeedbackFedAvg" if ef_wanted
                             else "a non-EF",
                             type(aggregator).__name__))
+        if isinstance(aggregator, FedBuffAggregator) \
+                and aggregator.half_life is None:
+            # half_life is a config field, not a hard-coded default:
+            # thread it from ServerConfig (copy, so the caller's instance
+            # stays reusable; the pending buffer must not alias)
+            aggregator = dataclasses.replace(
+                aggregator, half_life=scfg.fedbuff_half_life,
+                pending=list(aggregator.pending))
         sched = fcfg.rank_schedule
         if sched is not None:
             mixed = (len(set(sched.client_ranks)) > 1
                      or sched.max_rank != fcfg.rank
                      or sched.anneal_every > 0)
-            if mixed and not isinstance(aggregator, FedAvgAggregator):
-                # e.g. FedBuff has no rank-bucketed path: fail at config
-                # time, not with a shape error mid-round
+            if mixed and not isinstance(
+                    aggregator, (FedAvgAggregator, FedBuffAggregator)):
+                # only aggregators with a rank-bucketed path may see a
+                # mixed-rank cohort: fail at config time, not with a
+                # shape error mid-round
                 raise ValueError(
-                    f"{type(aggregator).__name__} cannot aggregate "
-                    "mixed-rank cohorts; use FedAvgAggregator (or a "
-                    "subclass such as SVDRecombinationAggregator)")
+                    f"{type(aggregator).__name__} has no rank-bucketed "
+                    "aggregation path for mixed-rank cohorts; use "
+                    "FedAvgAggregator (or a subclass such as "
+                    "SVDRecombinationAggregator) or FedBuffAggregator")
             explicit = getattr(aggregator, "r_target", None)
             if explicit is not None and explicit < sched.max_rank:
                 # a target below a scheduled client rank would let the
@@ -141,16 +193,16 @@ class FLServer:
                 fields["residuals"] = dict(aggregator.residuals)
             if hasattr(aggregator, "served_ranks"):
                 fields["served_ranks"] = dict(aggregator.served_ranks)
+            if hasattr(aggregator, "pending"):
+                fields["pending"] = list(aggregator.pending)
             aggregator = dataclasses.replace(aggregator, **fields)
         self.aggregator = aggregator
         self.ckpt = CheckpointManager(scfg.checkpoint_dir) \
             if scfg.checkpoint_dir else None
         # TCC is derived from MEASURED emitted message sizes, cached per
-        # client rank (message size is shape-determined, so one measure
-        # per rank is exact); the uplink re-measure cross-checks that
-        # EF/quant/rank changes never desynchronize the accounting
-        self._down_bytes_by_rank: dict[int, int] = {}
-        self._up_bytes_by_rank: dict[int, int] = {}
+        # client rank by the shared WireAccounting (also used by the
+        # async engine)
+        self.wire = WireAccounting(fcfg)
         self.initial_model_bytes = tree_bytes(self.frozen)
         self._tcc_cum = self.initial_model_bytes
 
@@ -167,26 +219,15 @@ class FLServer:
         return self.rank_schedule.rank_for(cid, rnd)
 
     def _bcast_rank(self, rank: int) -> Optional[int]:
-        """None keeps the uniform fleet's broadcast byte-identical to the
-        classic path (no resize walk)."""
-        return rank if self.rank_schedule is not None else None
+        return self.wire.bcast_rank(rank)
 
     def _downlink_bytes(self, rank: int) -> int:
-        got = self._down_bytes_by_rank.get(rank)
-        if got is None:
-            msg = flocora.server_downlink(self.global_train, self.fcfg,
-                                          self._bcast_rank(rank))
-            got = messages.packed_wire_bytes(msg)
-            self._down_bytes_by_rank[rank] = got
-        return got
+        return self.wire.downlink_bytes(self.global_train, rank)
 
     def _uplink_bytes(self, rank: int, msg: Any = None) -> int:
-        got = self._up_bytes_by_rank.get(rank)
-        if got is None:
-            if msg is None:            # no uplink emitted yet at this rank
-                return self._downlink_bytes(rank)
-            got = messages.packed_wire_bytes(msg)
-            self._up_bytes_by_rank[rank] = got
+        got = self.wire.uplink_bytes(rank, msg)
+        if got is None:               # no uplink emitted yet at this rank
+            return self._downlink_bytes(rank)
         return got
 
     # -- fault tolerance ----------------------------------------------------
@@ -322,7 +363,7 @@ class FLServer:
         if fcfg.qcfg.enabled:
             rec["up_bytes_measured"] = self._uplink_bytes(
                 max(kept_ranks, key=kept_ranks.get))
-            rec["up_bytes_by_rank"] = dict(self._up_bytes_by_rank)
+            rec["up_bytes_by_rank"] = dict(self.wire.up)
         if self.eval_fn and self.round % self.scfg.eval_every == 0:
             rec.update(self.eval_fn(self.frozen, self.global_train))
         self.history.append(rec)

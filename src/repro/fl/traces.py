@@ -1,0 +1,127 @@
+"""Client latency/availability traces for the async federation engine.
+
+A production fleet of millions of devices is not round-lockstep: a
+client's update arrives whenever its compute + network latency and its
+availability windows allow. This module supplies the PLUGGABLE timing
+models that ``fl/async_engine.py`` schedules dispatch/arrival events
+with:
+
+  * :class:`LognormalLatency` — lognormal compute time scaled by the
+    client's adapter-rank tier (a rank-32 workstation trains longer than
+    a rank-4 phone per step, but the tier also proxies device speed via
+    ``rank_exp``) plus wire-transfer time at a lognormal-jittered
+    throughput, so bigger messages genuinely take longer;
+  * :class:`AvailabilityWindows` — periodic per-client availability
+    (phones charge at night): a dispatch outside the client's window
+    waits for the next one;
+  * :class:`FleetTrace` — composes the two and owns DETERMINISTIC
+    REPLAY: every latency draw is keyed by ``(seed, cid,
+    dispatch_idx)`` through a fresh ``np.random.Generator``, so the
+    trace is a pure function of those ids — independent of event
+    processing order and of checkpoint/resume boundaries. Replaying a
+    run (or resuming a killed one) reproduces every arrival time
+    bit-exactly.
+
+All times are VIRTUAL seconds on the simulator clock.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import numpy as np
+
+# rng key domain for latency draws (the engine uses its own domains for
+# client sampling and batch shuffling; disjoint first keys keep every
+# stream independent under the shared seed)
+TAG_LATENCY = 0xA1
+
+
+@dataclasses.dataclass(frozen=True)
+class LognormalLatency:
+    """Per-arrival latency = compute + transfer.
+
+    compute  ~ compute_median_s * lognormal(0, compute_sigma)
+               * (rank / rank_ref) ** rank_exp
+    transfer = wire_bytes / (network_mbps * lognormal(0, network_sigma))
+
+    ``rank_exp > 0`` makes higher-rank tiers slower (more adapter math
+    per step); 0 decouples compute time from the tier.
+    """
+    compute_median_s: float = 30.0
+    compute_sigma: float = 0.6
+    network_mbps: float = 20.0
+    network_sigma: float = 0.4
+    rank_ref: int = 8
+    rank_exp: float = 1.0
+
+    def __post_init__(self):
+        if self.compute_median_s <= 0 or self.network_mbps <= 0:
+            raise ValueError("latency medians must be positive")
+        if self.compute_sigma < 0 or self.network_sigma < 0:
+            raise ValueError("sigmas must be >= 0")
+        if self.rank_ref < 1:
+            raise ValueError("rank_ref must be >= 1")
+
+    def sample(self, rng: np.random.Generator, rank: int,
+               wire_bytes: int) -> float:
+        comp = (self.compute_median_s
+                * rng.lognormal(0.0, self.compute_sigma)
+                * (max(rank, 1) / self.rank_ref) ** self.rank_exp)
+        bps = self.network_mbps * 1e6 / 8.0 \
+            * rng.lognormal(0.0, self.network_sigma)
+        return comp + wire_bytes / max(bps, 1.0)
+
+
+@dataclasses.dataclass(frozen=True)
+class AvailabilityWindows:
+    """Periodic per-client availability: client ``cid`` is available for
+    the first ``duty`` fraction of every ``period_s`` window, with a
+    deterministic per-client phase (a Knuth-hash spread, so the fleet's
+    windows are staggered instead of synchronized). ``period_s = 0`` or
+    ``duty >= 1`` means always available."""
+    period_s: float = 0.0
+    duty: float = 1.0
+
+    def __post_init__(self):
+        if self.period_s < 0:
+            raise ValueError("period_s must be >= 0")
+        if not 0.0 < self.duty <= 1.0:
+            raise ValueError("duty must be in (0, 1]")
+
+    def phase(self, cid: int) -> float:
+        if self.period_s <= 0:
+            return 0.0
+        return ((cid * 2654435761) % (1 << 32)) / float(1 << 32) \
+            * self.period_s
+
+    def next_available(self, cid: int, t: float) -> float:
+        """Earliest time >= t at which client cid is available."""
+        if self.period_s <= 0 or self.duty >= 1.0:
+            return t
+        pos = (t - self.phase(cid)) % self.period_s
+        if pos < self.duty * self.period_s:
+            return t
+        return t + (self.period_s - pos)
+
+
+@dataclasses.dataclass(frozen=True)
+class FleetTrace:
+    """Deterministic-replay fleet timing model.
+
+    ``arrival(cid, dispatch_idx, rank, wire_bytes, t_dispatch)`` returns
+    the virtual time at which that dispatch's update reaches the server:
+    availability wait, then the sampled compute+transfer latency. The
+    latency draw is a pure function of ``(seed, cid, dispatch_idx)`` —
+    see the module docstring for why that makes runs replayable."""
+    seed: int = 0
+    latency: LognormalLatency = dataclasses.field(
+        default_factory=LognormalLatency)
+    availability: AvailabilityWindows = dataclasses.field(
+        default_factory=AvailabilityWindows)
+
+    def arrival(self, cid: int, dispatch_idx: int, rank: int,
+                wire_bytes: int, t_dispatch: float) -> float:
+        rng = np.random.default_rng(
+            [self.seed, TAG_LATENCY, cid, dispatch_idx])
+        t0 = self.availability.next_available(cid, t_dispatch)
+        return t0 + self.latency.sample(rng, rank, wire_bytes)

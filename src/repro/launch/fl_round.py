@@ -46,7 +46,15 @@ def _stack_spec(x: jax.ShapeDtypeStruct, p: int, kp: int
 
 
 def build_fl_round(entry: ArchEntry, mesh: Mesh, *, clients_per_pod: int = 16,
-                   bits: Optional[int] = 8) -> dict:
+                   bits: Optional[int] = 8,
+                   staleness_half_life: Optional[float] = None) -> dict:
+    """``staleness_half_life`` switches the jittable round into the
+    ASYNC engine's multi-pod flush: ``fl_round`` takes an extra
+    (P, Kp) ``staleness`` operand and FedBuff-discounts each client's
+    weight by ``2^(-staleness / half_life)`` BEFORE the in-pod
+    reduction — the sync and async engines share the identical
+    broadcast/uplink codec path (stage-2 packed exchange included);
+    only the weighting differs."""
     cfg = entry.full()
     mod = ED if entry.kind == "encdec" else LM
     shapes = jax.eval_shape(
@@ -82,7 +90,7 @@ def build_fl_round(entry: ArchEntry, mesh: Mesh, *, clients_per_pod: int = 16,
         ("__pod", "__kp"), (n_pods, kp), mesh,
         {"__pod": "pod", "__kp": "data"}))
 
-    def fl_round(stacked_clients: Any, weights: Array) -> Any:
+    def _round_core(stacked_clients: Any, weights: Array) -> Any:
         # ---- stage 1: uplink dequant + in-pod weighted mean ------------
         recon = jax.vmap(jax.vmap(lambda t: messages.roundtrip(t, qcfg)))(
             stacked_clients)
@@ -125,6 +133,21 @@ def build_fl_round(entry: ArchEntry, mesh: Mesh, *, clients_per_pod: int = 16,
                                  pod_w),
             dec)
 
-    return {"fn": fl_round, "args": (stacked_shapes, w_spec),
-            "in_shardings": (sh_stacked, sh_w), "out_shardings": None,
-            "donate": (), "cfg": cfg}
+    if staleness_half_life is None:
+        return {"fn": _round_core, "args": (stacked_shapes, w_spec),
+                "in_shardings": (sh_stacked, sh_w), "out_shardings": None,
+                "donate": (), "cfg": cfg}
+
+    hl = float(staleness_half_life)
+
+    def fl_round_async(stacked_clients: Any, weights: Array,
+                       staleness: Array) -> Any:
+        # FedBuff discount w = n_k * 2^(-s/hl) ahead of the in-pod
+        # reduction; the quantized cross-pod exchange is unchanged
+        return _round_core(stacked_clients,
+                           weights * jnp.exp2(-staleness / hl))
+
+    return {"fn": fl_round_async,
+            "args": (stacked_shapes, w_spec, w_spec),
+            "in_shardings": (sh_stacked, sh_w, sh_w),
+            "out_shardings": None, "donate": (), "cfg": cfg}

@@ -1,0 +1,482 @@
+"""Async federation engine: deterministic fleet traces, the rank-bucketed
+staleness-discounted FedBuff buffer, the event-driven engine end-to-end
+(history/TCC integrity, compile-count bound), sync-baseline parity and
+bit-exact killed-then-resumed replay."""
+import math
+import os
+import shutil
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import aggregation, lora, messages
+from repro.core.aggregation import FedBuffAggregator
+from repro.core.flocora import FLoCoRAConfig, RankSchedule
+from repro.core.lora import LoRAConfig, linear_apply, linear_init
+from repro.core.quant import QuantConfig
+from repro.fl import AsyncConfig, AsyncFLServer, AvailabilityWindows, \
+    ClientConfig, FLServer, FleetTrace, LognormalLatency, ServerConfig, \
+    time_to_target
+from repro.fl.traces import TAG_LATENCY
+
+
+# ---------------------------------------------------------------------------
+# tiny LoRA workload (mirrors test_hetero_rank: fast compiles, real ranks)
+# ---------------------------------------------------------------------------
+
+SCALE = 1.0
+
+
+def _lora_model(seed=0, rank=16):
+    k = jax.random.PRNGKey(seed)
+    fz, tr = linear_init(k, 16, 10, "lora",
+                         LoRAConfig(rank=rank, alpha=float(rank)),
+                         base_dtype=jnp.float32)
+    return {"frozen": {"lin": fz},
+            "train": {"lin": tr, "bias": jnp.zeros((10,))}}
+
+
+def _lora_loss(frozen, train, batch):
+    logits = linear_apply(frozen["lin"], train["lin"], batch["x"], SCALE,
+                          jnp.float32) + train["bias"]
+    logp = jax.nn.log_softmax(logits)
+    return -jnp.mean(jnp.take_along_axis(logp, batch["y"][:, None],
+                                         axis=1)), {}
+
+
+def _lin_data(n=240, n_clients=10, seed=0):
+    rng = np.random.default_rng(seed)
+    w_true = rng.normal(size=(16, 10)).astype(np.float32)
+    x = rng.normal(size=(n, 16)).astype(np.float32)
+    y = np.argmax(x @ w_true + 0.1 * rng.normal(size=(n, 10)),
+                  axis=1).astype(np.int32)
+    parts = np.array_split(rng.permutation(n), n_clients)
+    return [{"x": x[p], "y": y[p]} for p in parts], {"x": x, "y": y}
+
+
+def _trace():
+    return FleetTrace(seed=0, latency=LognormalLatency(
+        compute_median_s=10.0, network_mbps=20.0))
+
+
+def _engine(data, acfg, fcfg, trace=None, **kw):
+    return AsyncFLServer(_lora_model(rank=fcfg.rank), _lora_loss, data,
+                         acfg, ClientConfig(local_epochs=2, batch_size=8,
+                                            lr=0.1),
+                         fcfg, trace=trace or _trace(), **kw)
+
+
+HCFG = FLoCoRAConfig(rank=16, alpha=16.0, quant_bits=8,
+                     rank_schedule=RankSchedule.tiered((8, 16), 10))
+
+
+# ---------------------------------------------------------------------------
+# traces: deterministic replay, availability windows
+# ---------------------------------------------------------------------------
+
+def test_trace_deterministic_replay():
+    """A latency draw is a pure function of (seed, cid, dispatch_idx):
+    same key -> bit-identical arrival regardless of call order."""
+    tr = _trace()
+    a1 = tr.arrival(3, 7, 8, 10_000, 5.0)
+    _ = tr.arrival(4, 8, 16, 20_000, 9.0)      # unrelated draw between
+    a2 = tr.arrival(3, 7, 8, 10_000, 5.0)
+    assert a1 == a2
+    assert a1 > 5.0
+    # different dispatch of the same client draws fresh latency
+    assert tr.arrival(3, 8, 8, 10_000, 5.0) != a1
+    # a different seed changes the whole trace
+    assert FleetTrace(seed=1).arrival(3, 7, 8, 10_000, 5.0) != a1
+
+
+def test_trace_latency_scales_with_rank_and_bytes():
+    lat = LognormalLatency(compute_median_s=10.0, compute_sigma=0.0,
+                           network_mbps=8.0, network_sigma=0.0,
+                           rank_ref=8, rank_exp=1.0)
+    rng = np.random.default_rng(0)
+    t_r8 = lat.sample(rng, 8, 1_000_000)
+    assert t_r8 == pytest.approx(10.0 + 1.0)        # 1 MB at 1 MB/s
+    assert lat.sample(rng, 16, 1_000_000) == pytest.approx(20.0 + 1.0)
+    assert lat.sample(rng, 8, 2_000_000) == pytest.approx(10.0 + 2.0)
+
+
+def test_availability_windows():
+    av = AvailabilityWindows(period_s=100.0, duty=0.5)
+    ph = av.phase(5)
+    assert 0.0 <= ph < 100.0
+    assert av.next_available(5, ph + 10.0) == ph + 10.0     # inside
+    t_closed = ph + 60.0                                    # outside
+    nxt = av.next_available(5, t_closed)
+    assert nxt == pytest.approx(ph + 100.0)                 # next window
+    # always-available configs are the identity
+    assert AvailabilityWindows().next_available(5, 42.0) == 42.0
+    # per-client phases are staggered, not synchronized
+    assert av.phase(5) != av.phase(6)
+
+
+def test_trace_rng_domain_disjoint_from_engine():
+    """TAG_LATENCY must not collide with the engine's key domains."""
+    from repro.fl.async_engine import TAG_BATCH, TAG_SAMPLE
+    assert len({TAG_LATENCY, TAG_SAMPLE, TAG_BATCH}) == 3
+
+
+# ---------------------------------------------------------------------------
+# FedBuff: rank-bucketed add/flush + per-bucket sync staleness
+# ---------------------------------------------------------------------------
+
+def _client_tree(seed, rank):
+    k = jax.random.PRNGKey(seed)
+    ad = lora.dense_lora_init(k, 16, 12, LoRAConfig(rank=rank,
+                                                    alpha=16.0 * rank))
+    return {"lin": {"a": ad["a"],
+                    "b": jax.random.normal(jax.random.fold_in(k, 1),
+                                           ad["b"].shape) * 0.1},
+            "norm": jax.random.normal(jax.random.fold_in(k, 2), (5,))}
+
+
+def test_fedbuff_bucketed_add_flush_matches_reference():
+    """Buffered packed messages of MIXED rank flush in one rank-bucketed
+    fused pass; result equals the manual staleness-discounted weighted
+    mean over zero-padded dequantized trees."""
+    qcfg = QuantConfig(bits=8)
+    ranks = (4, 4, 8)
+    stales = (0.0, 1.0, 2.0)
+    n_k = (10.0, 20.0, 30.0)
+    trees = [_client_tree(i, r) for i, r in enumerate(ranks)]
+    msgs = [messages.pack_message(t, qcfg) for t in trees]
+    agg = FedBuffAggregator(half_life=2.0, r_target=8)
+    for m, n, s in zip(msgs, n_k, stales):
+        agg.add(m, n, s)
+    assert len(agg.pending) == 3
+    got = agg.flush()
+    assert not agg.pending
+    # manual reference: dequantize, pad to rank 8, discounted mean
+    w = np.asarray([n * 2.0 ** (-s / 2.0) for n, s in zip(n_k, stales)])
+    recon = [lora.resize_tree_rank(messages.unpack_message(m), 8)
+             for m in msgs]
+    ref = jax.tree.map(
+        lambda *xs: sum(float(wi) * x for wi, x in zip(w / w.sum(), xs)),
+        *recon)
+    assert lora.tree_max_rank(got) == 8
+    for ka in ("lin", "norm"):
+        for a, b in zip(jax.tree.leaves(got[ka]),
+                        jax.tree.leaves(ref[ka])):
+            np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                                       rtol=1e-4, atol=1e-5)
+
+
+def test_fedbuff_sync_rank_staleness_per_bucket():
+    """In the sync adapter, arrival order WITHIN each rank bucket plays
+    the staleness role — bucket-leading arrivals are undiscounted."""
+    ranks = (4, 8, 4, 8)
+    trees = [_client_tree(i, r) for i, r in enumerate(ranks)]
+    w = np.asarray([1.0, 1.0, 1.0, 1.0], np.float32)
+    agg = FedBuffAggregator(half_life=1.0, rank_staleness=True,
+                            r_target=8)
+    got = agg.aggregate(trees, jnp.asarray(w))
+    # manual: in-bucket positions -> staleness (0, 0, 1, 1), hl=1
+    disc = w * np.exp2(-np.asarray([0.0, 0.0, 1.0, 1.0]))
+    padded = [lora.resize_tree_rank(t, 8) for t in trees]
+    ref = jax.tree.map(
+        lambda *xs: sum(float(wi) * x
+                        for wi, x in zip(disc / disc.sum(), xs)),
+        *padded)
+    for a, b in zip(jax.tree.leaves(got), jax.tree.leaves(ref)):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                                   rtol=1e-5, atol=1e-6)
+
+
+def test_fedbuff_discount_formula():
+    """w = n_k * 2^(-staleness / half_life), documented + threaded."""
+    agg = FedBuffAggregator(half_life=4.0)
+    assert agg.discounted_weight(8.0, 0.0) == 8.0
+    assert agg.discounted_weight(8.0, 4.0) == pytest.approx(4.0)
+    assert agg.discounted_weight(8.0, 8.0) == pytest.approx(2.0)
+    # unset half_life resolves to the module default until threaded
+    assert FedBuffAggregator().resolved_half_life() == \
+        aggregation.FEDBUFF_HALF_LIFE
+
+
+def test_fedbuff_incremental_reference_matches_buffered_path():
+    """The incremental fp reference (fedbuff_init/add/flush) and the
+    production buffered path (FedBuffAggregator.add/flush) implement the
+    SAME discounted rule — keep them consistent."""
+    trees = [_client_tree(i, 8) for i in range(3)]
+    n_k = (4.0, 2.0, 6.0)
+    stales = (0.0, 1.0, 3.0)
+    hl = 2.0
+    st = aggregation.fedbuff_init(trees[0])
+    for t, n, s in zip(trees, n_k, stales):
+        st = aggregation.fedbuff_add(st, t, jnp.asarray(n),
+                                     jnp.asarray(s), half_life=hl)
+    ref, _ = aggregation.fedbuff_flush(st, trees[0])
+    agg = FedBuffAggregator(half_life=hl, r_target=8)
+    for t, n, s in zip(trees, n_k, stales):
+        agg.add(t, n, s)
+    got = agg.flush()
+    for a, b in zip(jax.tree.leaves(got), jax.tree.leaves(ref)):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                                   rtol=1e-5, atol=1e-6)
+
+
+def test_fedbuff_half_life_threaded_from_configs():
+    """SATELLITE: half_life is a config field, threaded by both engines
+    into an aggregator that did not pin one explicitly."""
+    data, _ = _lin_data()
+    srv = FLServer(_lora_model(rank=16), _lora_loss, data,
+                   ServerConfig(rounds=1, n_clients=10,
+                                clients_per_round=4,
+                                fedbuff_half_life=2.5),
+                   ClientConfig(), HCFG, aggregator=FedBuffAggregator())
+    assert srv.aggregator.half_life == 2.5
+    # an explicit half_life wins over the config
+    srv2 = FLServer(_lora_model(rank=16), _lora_loss, data,
+                    ServerConfig(rounds=1, n_clients=10,
+                                 clients_per_round=4,
+                                 fedbuff_half_life=2.5),
+                    ClientConfig(), HCFG,
+                    aggregator=FedBuffAggregator(half_life=7.0))
+    assert srv2.aggregator.half_life == 7.0
+    asrv = _engine(data, AsyncConfig(total_arrivals=4, concurrency=2,
+                                     buffer_size=2, half_life=3.0), HCFG)
+    assert asrv.aggregator.half_life == 3.0
+    assert asrv.aggregator.r_target == 16
+
+
+def test_sync_server_accepts_fedbuff_for_mixed_ranks():
+    """SATELLITE: the construction-time rejection is gone — a mixed-rank
+    schedule trains through FedBuff's rank-bucketed path end-to-end."""
+    data, _ = _lin_data()
+    srv = FLServer(_lora_model(rank=16), _lora_loss, data,
+                   ServerConfig(rounds=1, n_clients=10,
+                                clients_per_round=6),
+                   ClientConfig(local_epochs=1, batch_size=8, lr=0.1),
+                   HCFG,
+                   aggregator=FedBuffAggregator(rank_staleness=True))
+    rec = srv.run_round()
+    assert np.isfinite(rec["client_loss"])
+    assert lora.tree_ranks(srv.global_train) == (16,)
+
+
+def test_sync_server_still_rejects_bucketless_aggregators():
+    """Only truly unsupported combos keep the config-validation error:
+    an aggregator with no rank-bucketed path + a mixed schedule."""
+
+    class PlainMean:
+        def aggregate(self, msgs, weights):
+            return aggregation.fedavg(aggregation.stack_trees(msgs),
+                                      jnp.asarray(weights))
+
+    data, _ = _lin_data()
+    with pytest.raises(ValueError, match="rank-bucketed"):
+        FLServer(_lora_model(rank=16), _lora_loss, data,
+                 ServerConfig(rounds=1, n_clients=10,
+                              clients_per_round=4),
+                 ClientConfig(), HCFG, aggregator=PlainMean())
+
+
+def test_quant_tcc_bytes_shim_deprecated():
+    """SATELLITE: the scalar quant.tcc_bytes survives as a deprecation
+    shim over the canonical messages.tcc_bytes formula."""
+    from repro.core import quant
+    tree = {"w": jnp.zeros((8, 8))}
+    cfg = QuantConfig(bits=8)
+    with pytest.warns(DeprecationWarning):
+        legacy = quant.tcc_bytes(messages.message_wire_bytes(tree, cfg),
+                                 rounds=7)
+    assert legacy == messages.tcc_bytes(tree, cfg, rounds=7)
+
+
+# ---------------------------------------------------------------------------
+# the engine: config validation, end-to-end smoke, compile bound
+# ---------------------------------------------------------------------------
+
+def test_async_config_validation():
+    with pytest.raises(ValueError):
+        AsyncConfig(buffer_size=0)
+    with pytest.raises(ValueError):
+        AsyncConfig(half_life=0.0)
+    with pytest.raises(ValueError):
+        AsyncConfig(microbatch_window=-1.0)
+    data, _ = _lin_data()
+    with pytest.raises(ValueError, match="error feedback"):
+        _engine(data, AsyncConfig(total_arrivals=4),
+                FLoCoRAConfig(rank=16, alpha=16.0, quant_bits=8,
+                              error_feedback=True))
+    with pytest.raises(ValueError, match="FedBuffAggregator"):
+        _engine(data, AsyncConfig(total_arrivals=4), HCFG,
+                aggregator=aggregation.FedAvgAggregator())
+    with pytest.raises(ValueError, match="rank_schedule"):
+        _engine(data[:4], AsyncConfig(total_arrivals=4), HCFG)
+    # an explicit r_target off the server rank would shape-error the
+    # delta flush mid-run: rejected at config time
+    with pytest.raises(ValueError, match="r_target"):
+        _engine(data, AsyncConfig(total_arrivals=4), HCFG,
+                aggregator=FedBuffAggregator(r_target=8))
+    with pytest.raises(ValueError):
+        AsyncConfig(eval_every=0)
+
+
+def test_async_engine_end_to_end():
+    """40 arrivals over a 2-tier fleet: versions advance, loss falls,
+    staleness is tracked, TCC sums measured wire bytes, and the compiled
+    program count respects the #ranks x log2(microbatch) bound."""
+    data, full = _lin_data()
+
+    def eval_fn(frozen, train):
+        return {"eval_loss": float(_lora_loss(frozen, train, full)[0])}
+
+    acfg = AsyncConfig(total_arrivals=40, concurrency=4, buffer_size=5,
+                       microbatch_window=8.0, seed=0, eval_every=4)
+    srv = _engine(data, acfg, HCFG, eval_fn=eval_fn)
+    hist = srv.run()
+    assert len(hist) == 8 and srv.version == 8
+    assert [h["version"] for h in hist] == list(range(1, 9))
+    assert all(h["n_flushed"] == 5 for h in hist)
+    # virtual clock is monotone; staleness bounded by version depth
+    ts = [h["t_virtual"] for h in hist]
+    assert ts == sorted(ts) and ts[0] > 0.0
+    assert all(h["staleness_mean"] >= 0.0 for h in hist)
+    # both tiers flushed at some point (str keys: history is JSON-safe)
+    seen_ranks = set().union(*(h["flush_ranks"] for h in hist))
+    assert seen_ranks == {"8", "16"}
+    # TCC = shared-once initial model + measured down/uplinks, monotone
+    assert hist[-1]["tcc_bytes"] == srv.tcc_bytes
+    assert hist[-1]["tcc_bytes"] == srv.initial_model_bytes \
+        + hist[-1]["down_bytes"] + hist[-1]["up_bytes"]
+    tccs = [h["tcc_bytes"] for h in hist]
+    assert tccs == sorted(tccs)
+    # it learns
+    assert hist[-1]["client_loss"] < hist[0]["client_loss"]
+    assert "eval_loss" in hist[3]
+    # ACCEPTANCE: recompiles bounded by #ranks x log2(max micro-batch)
+    bound = 2 * (int(math.log2(acfg.concurrency)) + 1)
+    assert len(srv.program_keys) <= bound
+    assert {r for r, _ in srv.program_keys} == {8, 16}
+    # time/bytes-to-target metric finds the trajectory point
+    hit = time_to_target(hist, "client_loss", hist[-1]["client_loss"],
+                         mode="min")
+    assert hit is not None and hit["tcc_bytes"] <= hist[-1]["tcc_bytes"]
+
+
+def test_async_engine_fp_uniform_fleet():
+    """Quantization off + uniform ranks: fp messages traverse the same
+    event loop (single-tier program cache)."""
+    data, _ = _lin_data()
+    fcfg = FLoCoRAConfig(rank=8, alpha=8.0)
+    acfg = AsyncConfig(total_arrivals=10, concurrency=3, buffer_size=5,
+                       seed=1)
+    srv = _engine(data, acfg, fcfg)
+    hist = srv.run()
+    assert len(hist) == 2
+    assert {r for r, _ in srv.program_keys} == {8}
+    assert hist[-1]["up_bytes"] > 0
+
+
+def test_async_fresh_buffer_equals_fedavg_of_buffer():
+    """With every buffered update fresh (staleness 0), server_lr 1 and
+    quantization OFF (so each client's start IS the server tree), one
+    flush reproduces the plain FedAvg of the buffered messages — the
+    delta-apply rule reduces to the sync aggregation. (With quantization
+    on, deltas are measured against the DEQUANTIZED broadcast the client
+    actually received, which differs from the server tree by the
+    broadcast's bounded quantization error.)"""
+    data, _ = _lin_data()
+    fcfg = FLoCoRAConfig(rank=8, alpha=8.0)
+    # concurrency == buffer_size: every arrival in a flush was
+    # dispatched from the same version -> staleness 0
+    acfg = AsyncConfig(total_arrivals=4, concurrency=4, buffer_size=4,
+                       microbatch_window=1e9, seed=0)
+    srv = _engine(data, acfg, fcfg)
+    # capture the buffered messages + weights at flush time
+    captured = {}
+    orig_flush = srv.aggregator.flush
+
+    def spy_flush():
+        captured["msgs"] = [m for m, _ in srv.aggregator.pending]
+        captured["w"] = [w for _, w in srv.aggregator.pending]
+        return orig_flush()
+
+    srv.aggregator.flush = spy_flush
+    hist = srv.run()
+    assert hist[-1]["staleness_max"] == 0
+    ref = aggregation.fedavg(aggregation.stack_trees(captured["msgs"]),
+                             jnp.asarray(captured["w"]))
+    for a, b in zip(jax.tree.leaves(jax.device_get(srv.global_train)),
+                    jax.tree.leaves(jax.device_get(ref))):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                                   rtol=1e-5, atol=1e-6)
+
+
+# ---------------------------------------------------------------------------
+# acceptance: sync parity + bit-exact resume
+# ---------------------------------------------------------------------------
+
+@pytest.mark.slow
+def test_async_reaches_sync_baseline_loss():
+    """ACCEPTANCE: >= 200 virtual arrivals over >= 2 rank tiers reach
+    within 2% of the sync baseline's final loss (same update budget:
+    20 rounds x 10 clients)."""
+    data, full = _lin_data()
+
+    def eval_fn(frozen, train):
+        return {"eval_loss": float(_lora_loss(frozen, train, full)[0])}
+
+    ccfg = ClientConfig(local_epochs=2, batch_size=8, lr=0.1)
+    srv = FLServer(_lora_model(rank=16), _lora_loss, data,
+                   ServerConfig(rounds=20, n_clients=10,
+                                clients_per_round=10, eval_every=20),
+                   ccfg, HCFG, eval_fn=eval_fn)
+    sync_loss = srv.run()[-1]["eval_loss"]
+
+    acfg = AsyncConfig(total_arrivals=200, concurrency=8, buffer_size=10,
+                       microbatch_window=8.0, seed=0)
+    asrv = AsyncFLServer(_lora_model(rank=16), _lora_loss, data, acfg,
+                         ccfg, HCFG, trace=_trace(), eval_fn=eval_fn)
+    asrv.run()
+    async_loss = eval_fn(asrv.frozen, asrv.global_train)["eval_loss"]
+    assert asrv.version == 20
+    assert async_loss <= 1.02 * sync_loss, (async_loss, sync_loss)
+    bound = 2 * (int(math.log2(acfg.concurrency)) + 1)
+    assert len(asrv.program_keys) <= bound
+
+
+@pytest.mark.slow
+def test_async_resume_is_bit_exact(tmp_path):
+    """ACCEPTANCE: a killed-then-resumed run reproduces the
+    uninterrupted run's history AND final global tree bit-exactly."""
+    data, _ = _lin_data()
+    ccfg = ClientConfig(local_epochs=2, batch_size=8, lr=0.1)
+    d_a, d_b = str(tmp_path / "a"), str(tmp_path / "b")
+
+    def acfg(d):
+        return AsyncConfig(total_arrivals=40, concurrency=4,
+                           buffer_size=5, microbatch_window=8.0, seed=0,
+                           checkpoint_dir=d, checkpoint_every=2)
+
+    srv_a = AsyncFLServer(_lora_model(rank=16), _lora_loss, data,
+                          acfg(d_a), ccfg, HCFG, trace=_trace())
+    hist_a = srv_a.run()
+    # "kill": keep only the OLDEST surviving checkpoint in a copy
+    os.makedirs(d_b)
+    for fn in os.listdir(d_a):
+        shutil.copy(os.path.join(d_a, fn), d_b)
+    steps = sorted(int(f[5:-5]) for f in os.listdir(d_b)
+                   if f.endswith(".json"))
+    assert len(steps) >= 2        # resume point strictly mid-run
+    for s in steps[1:]:
+        for ext in (".npz", ".json"):
+            os.remove(os.path.join(d_b, f"ckpt_{s:08d}{ext}"))
+
+    srv_b = AsyncFLServer(_lora_model(rank=16), _lora_loss, data,
+                          acfg(d_b), ccfg, HCFG, trace=_trace())
+    assert srv_b.try_resume()
+    assert srv_b.n_flushes == steps[0] < srv_a.n_flushes
+    assert srv_b.inflight          # mid-run state restored
+    hist_b = srv_b.run()
+    assert hist_a == hist_b        # bit-exact: dict/float equality
+    for a, b in zip(jax.tree.leaves(jax.device_get(srv_a.global_train)),
+                    jax.tree.leaves(jax.device_get(srv_b.global_train))):
+        assert np.array_equal(np.asarray(a), np.asarray(b))

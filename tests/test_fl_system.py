@@ -124,6 +124,39 @@ def test_elastic_restore_onto_new_mesh(tmp_path):
                                np.asarray(tree["w"]))
 
 
+def test_elastic_restore_cross_mesh_shardings(tmp_path):
+    """SATELLITE: a checkpoint written under a 1-device mesh restores
+    onto a DIFFERENT mesh shape with leaf equality AND the new mesh's
+    NamedSharding annotations on every restored leaf."""
+    from jax.sharding import Mesh, NamedSharding
+    from repro.utils.sharding import tree_shardings
+    from repro.utils.tree import flatten_with_names
+    d = str(tmp_path)
+    tree = {"w": jnp.arange(32.0).reshape(4, 8), "b": jnp.arange(8.0)}
+    logical = {"train": {"w": ("fsdp", "mlp"), "b": (None,)}}
+    dev = np.asarray(jax.devices()[:1])
+    # checkpoint under a 1-device ('data',) mesh (stored logically —
+    # nothing about the file depends on this topology)
+    with Mesh(dev.reshape(1), ("data",)):
+        save(d, 5, {"train": tree})
+    # restore onto a (1, 1) ('data', 'model') mesh — different shape
+    mesh2 = Mesh(dev.reshape(1, 1), ("data", "model"))
+    got = elastic_restore(d, {"train": tree}, logical, mesh2)
+    assert got is not None
+    step, trees, _ = got
+    assert step == 5
+    expect_sh = dict(flatten_with_names(
+        tree_shardings(logical["train"], tree, mesh2)))
+    restored = dict(flatten_with_names(trees["train"]))
+    assert set(restored) == {"w", "b"}
+    for name, leaf in restored.items():
+        np.testing.assert_array_equal(np.asarray(leaf),
+                                      np.asarray(tree[name]))
+        assert isinstance(leaf.sharding, NamedSharding)
+        assert leaf.sharding.mesh.shape == mesh2.shape
+        assert leaf.sharding == expect_sh[name], (name, leaf.sharding)
+
+
 def test_fl_tcc_accounting_matches_codec():
     data = _setup(n=100, n_clients=4)
     srv = _server(data)

@@ -407,18 +407,32 @@ def test_all_dropout_round_recorded():
         hist[0]["round_bytes"] + hist[1]["round_bytes"]
 
 
-def test_non_hetero_aggregator_rejected_for_mixed_schedule():
-    """FedBuff has no rank-bucketed path: a mixed-rank schedule must be
-    rejected at construction, not crash with a shape error mid-round."""
-    from repro.core.aggregation import FedBuffAggregator
+def test_mixed_schedule_aggregator_validation():
+    """FedBuff now HAS a rank-bucketed path, so a mixed-rank schedule is
+    accepted (with the config half_life threaded in); an aggregator
+    without one is still rejected at construction, not with a shape
+    error mid-round."""
+    from repro.core.aggregation import FedBuffAggregator, fedavg, \
+        stack_trees
     data = _lin_data()
     fcfg = FLoCoRAConfig(rank=32, alpha=32.0, quant_bits=8,
                          rank_schedule=RankSchedule.tiered(TIERS, 10))
-    with pytest.raises(ValueError):
+    srv = FLServer(_lora_model(rank=32), _lora_loss, data,
+                   ServerConfig(rounds=1, n_clients=10,
+                                clients_per_round=4),
+                   ClientConfig(), fcfg, aggregator=FedBuffAggregator())
+    assert srv.aggregator.r_target == 32
+    assert srv.aggregator.half_life == srv.scfg.fedbuff_half_life
+
+    class PlainMean:                  # no rank-bucketed path
+        def aggregate(self, msgs, weights):
+            return fedavg(stack_trees(msgs), jnp.asarray(weights))
+
+    with pytest.raises(ValueError, match="rank-bucketed"):
         FLServer(_lora_model(rank=32), _lora_loss, data,
                  ServerConfig(rounds=1, n_clients=10,
                               clients_per_round=4),
-                 ClientConfig(), fcfg, aggregator=FedBuffAggregator())
+                 ClientConfig(), fcfg, aggregator=PlainMean())
     # explicit r_target below the schedule max would let the global
     # tree's rank float round-to-round — also rejected at init
     with pytest.raises(ValueError):
