@@ -27,9 +27,16 @@ the delta is pure dispatch batching), compiled-program counts against
 the #ranks x log2(micro-batch) bound, and the wall-clock-vs-bytes
 trajectory (virtual seconds + measured TCC per flushed version).
 
+``--sparse`` sweeps the SPARSE-DELTA wire (core/sparse.py): measured
+uplink bytes for fp32 vs 2/4/8-bit dense vs 4-bit x density in
+{0.25, 0.1, 0.05} (every row cross-checked against the static
+accounting), plus steady-state aggregate timing of the scatter-add
+sparse path vs the fused dense packed path over a K-client cohort.
+
     PYTHONPATH=src python -m benchmarks.round_throughput \
         [--clients 8] [--samples 64] [--iters 3] \
-        [--rank-profile 4,8,16,32] | [--async [--arrivals 12]]
+        [--rank-profile 4,8,16,32] | [--async [--arrivals 12]] | \
+        [--sparse]
 """
 from __future__ import annotations
 
@@ -239,6 +246,64 @@ def run_async(n_clients: int = 8, samples_per_client: int = 48,
     return rows
 
 
+def run_sparse(n_clients: int = 6, samples_per_client: int = 48,
+               iters: int = 2) -> list[str]:
+    """Sparse-delta wire sweep: measured bytes across bits x density +
+    scatter-add vs fused-dense aggregate timing."""
+    from repro.core.quant import QuantConfig
+    from repro.core.aggregation import FedAvgAggregator
+    from repro.core.sparse import SparsityConfig
+
+    rows = []
+    _, _, model, _, _ = _setup_fl(n_clients, samples_per_client, rank=8)
+    train0 = model["train"]
+    fp_bytes = messages.message_wire_bytes(train0, QuantConfig())
+    rows.append(f"sparse/wire_fp32,0,bytes={fp_bytes}")
+    for bits in (8, 4, 2):
+        dense = messages.message_wire_bytes(train0, QuantConfig(bits=bits))
+        rows.append(f"sparse/wire_int{bits}_dense,0,bytes={dense} "
+                    f"compression={fp_bytes / dense:.2f}x")
+    for density in (0.25, 0.1, 0.05):
+        cfg = QuantConfig(bits=4)
+        msg = messages.pack_message(train0, cfg, density=density)
+        measured = messages.packed_wire_bytes(msg)
+        static = messages.message_wire_bytes(train0, cfg, density)
+        assert measured == static, (measured, static)
+        rows.append(f"sparse/wire_int4_d{density},0,bytes={measured} "
+                    f"compression={fp_bytes / measured:.2f}x "
+                    f"matches_static={measured == static}")
+
+    # steady-state aggregation: K sparse scatter-add vs K fused dense
+    qcfg = QuantConfig(bits=4)
+    keys = jax.random.split(jax.random.PRNGKey(0), n_clients)
+    trees = [jax.tree.map(
+        lambda x, k=k: x + 0.01 * jax.random.normal(k, x.shape), train0)
+        for k in keys]
+    w = jnp.ones((n_clients,), jnp.float32)
+    dense_msgs = [messages.pack_message(t, qcfg) for t in trees]
+    sparse_msgs = [messages.pack_message(t, qcfg, density=0.1)
+                   for t in trees]
+    agg = FedAvgAggregator(qcfg)
+    t_dense = _time(lambda: jax.tree.leaves(
+        agg.aggregate(dense_msgs, w))[0], iters)
+    t_sparse = _time(lambda: jax.tree.leaves(
+        agg.aggregate(sparse_msgs, w))[0], iters)
+    rows.append(f"sparse/agg_dense_k{n_clients},{t_dense * 1e6:.0f},"
+                f"cohorts_per_sec={1 / t_dense:.2f}")
+    rows.append(f"sparse/agg_scatter_k{n_clients},{t_sparse * 1e6:.0f},"
+                f"cohorts_per_sec={1 / t_sparse:.2f} "
+                f"vs_dense={t_dense / t_sparse:.2f}x")
+
+    # end-to-end round bytes of a sparse+EF config (accounting only)
+    fcfg = FLoCoRAConfig(rank=8, alpha=128.0, quant_bits=4,
+                         error_feedback=True,
+                         sparsity=SparsityConfig(density=0.1))
+    rb = flocora.round_wire_bytes(train0, fcfg)
+    rows.append(f"sparse/round_bytes_ef_d0.1,0,down={rb['down_bytes']} "
+                f"up={rb['up_bytes']} round={rb['round_bytes']}")
+    return rows
+
+
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--clients", type=int, default=6)
@@ -249,6 +314,8 @@ def main() -> None:
                          "sweep the rank-bucketed engine")
     ap.add_argument("--async", dest="async_", action="store_true",
                     help="event-driven FedBuff engine sweep")
+    ap.add_argument("--sparse", action="store_true",
+                    help="sparse-delta wire sweep (bytes + scatter-add)")
     ap.add_argument("--arrivals", type=int, default=12,
                     help="virtual arrivals for the --async sweep")
     args = ap.parse_args()
@@ -256,7 +323,9 @@ def main() -> None:
         ap.error("--clients/--samples/--iters must be >= 1")
     if args.arrivals < 1:
         ap.error("--arrivals must be >= 1")
-    if args.async_:
+    if args.sparse:
+        rows = run_sparse(args.clients, args.samples, args.iters)
+    elif args.async_:
         rows = run_async(args.clients, args.samples, args.arrivals)
     elif args.rank_profile:
         try:

@@ -16,8 +16,14 @@ latency trace, arrivals buffer with staleness-discounted weights, and
 every ``--buffer`` arrivals flush into a new global version. Prints the
 per-version (virtual time, loss, staleness, TCC) trajectory.
 
+``--sparse`` runs the FLASC-style sparse-delta uplink (core/sparse.py):
+clients top-k sparsify their adapter deltas to 10% density, survivors
+quantize to 4 bits, and error feedback re-ships each round's dropped
+mass — prints fp32 vs int4 vs int4+10% message sizes and the asymmetric
+down/up byte trajectory.
+
     PYTHONPATH=src python examples/quickstart.py [--rounds 10] \
-        [--hetero | --async [--arrivals 90]]
+        [--hetero | --async [--arrivals 90] | --sparse [--density 0.1]]
 """
 import argparse
 import sys
@@ -156,6 +162,49 @@ def run_async(arrivals: int, buffer_size: int):
               f"min / {hit['tcc_bytes'] / 1e6:.2f} MB")
 
 
+def run_sparse(rounds: int, density: float):
+    """Sparse-delta uplink: top-k 10%-density 4-bit adapters with error
+    feedback, over the same 20-client fleet as the uniform quickstart."""
+    from repro.core.sparse import SparsityConfig
+
+    rng = np.random.default_rng(0)
+    sv = SyntheticVision(seed=0)
+    y = rng.integers(0, 10, 2000)
+    x = sv.sample(rng, y)
+    parts = lda_partition(y, 20, alpha=0.5)
+    data = [{"x": x[p], "y": y[p].astype(np.int32)} for p in parts]
+
+    cfg = ResNetConfig(arch="resnet8", lora=LoRAConfig(rank=32, alpha=512.0))
+    model = resnet_init(jax.random.PRNGKey(0), cfg)
+    fcfg = FLoCoRAConfig(rank=32, alpha=512.0, quant_bits=4,
+                         error_feedback=True,
+                         sparsity=SparsityConfig(density=density))
+
+    fp = messages.message_wire_bytes(model["train"], QuantConfig())
+    q4 = messages.message_wire_bytes(model["train"], QuantConfig(bits=4))
+    sp = messages.message_wire_bytes(model["train"], QuantConfig(bits=4),
+                                     density)
+    print(f"uplink: fp32 {fp / 1e3:.1f} kB -> int4 {q4 / 1e3:.1f} kB "
+          f"-> int4+top-k({density:.0%}) {sp / 1e3:.1f} kB "
+          f"({fp / sp:.1f}x smaller; EF re-ships the dropped mass)")
+
+    server = FLServer(
+        model, lambda f, t, b: loss_fn(f, t, cfg, b), data,
+        ServerConfig(rounds=rounds, n_clients=20, clients_per_round=5),
+        ClientConfig(local_epochs=1, batch_size=32, lr=0.01),
+        fcfg)
+    for h in server.run():
+        print({k: h[k] for k in ("round", "n_agg", "client_loss",
+                                 "uplink_density", "down_bytes",
+                                 "up_bytes", "tcc_bytes") if k in h})
+    hist = server.history
+    print(f"round bytes down/up: {hist[-1]['down_bytes']} / "
+          f"{hist[-1]['up_bytes']} "
+          f"(dense wire would up {hist[-1]['down_bytes']})")
+    # sanity: measured uplink == static sparse accounting
+    assert hist[-1]["up_bytes_measured"] == sp
+
+
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--rounds", type=int, default=6)
@@ -163,12 +212,20 @@ def main():
                     help="mixed-rank cohort (10 clients, 3 rank tiers)")
     ap.add_argument("--async", dest="async_", action="store_true",
                     help="event-driven FedBuff fleet (virtual clock)")
+    ap.add_argument("--sparse", action="store_true",
+                    help="FLASC-style top-k sparse uplink with EF")
+    ap.add_argument("--density", type=float, default=0.1,
+                    help="sparse: fraction of adapter entries uplinked")
     ap.add_argument("--arrivals", type=int, default=90,
                     help="async: total virtual arrivals")
     ap.add_argument("--buffer", type=int, default=6,
                     help="async: FedBuff buffer size")
     args = ap.parse_args()
-    if args.async_:
+    if args.sparse and not 0.0 < args.density <= 1.0:
+        ap.error("--density must be in (0, 1]")
+    if args.sparse:
+        run_sparse(args.rounds, args.density)
+    elif args.async_:
         run_async(args.arrivals, args.buffer)
     elif args.hetero:
         run_hetero(args.rounds)

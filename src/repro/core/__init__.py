@@ -10,7 +10,9 @@ from repro.core.aggregation import Aggregator, FedAvgAggregator, \
     bucket_by_rank, fedavg_hetero, fedavg_packed
 from repro.core.messages import PackedLeaf, pack_message, unpack_message, \
     packed_wire_bytes, message_wire_bytes, message_rank, message_to_wire, \
-    parse_wire_header
+    message_from_wire, message_density, parse_wire_header
+from repro.core.sparse import SparseLeaf, SparsityConfig, is_sparse_leaf, \
+    sparse_leaf_wire_bytes, sparsify_leaf
 from repro.core.lora import LoRAConfig, dense_lora_init, dense_lora_apply, \
     dense_merge, conv_lora_init, conv_lora_apply, conv_merge, linear_init, \
     linear_apply, linear_logical, adapter_rank, is_adapter_pair, \

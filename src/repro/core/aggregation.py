@@ -10,7 +10,9 @@ Implemented here:
   * ``fedavg_packed`` — the wire-true path: K PACKED client messages
     (uint32 payloads + sidecars) are unpacked, dequantized and reduced in
     one pass on the fused ``dequant_agg`` Pallas kernel — the K dequantized
-    fp32 client trees are never materialized;
+    fp32 client trees are never materialized; SPARSE (FLASC top-k)
+    uplinks scatter-add their dequantized survivors into one dense fp32
+    accumulator per leaf instead;
   * ``fedbuff``     — beyond-paper async buffered aggregation with
     staleness discounting (Nguyen et al. '22 style);
   * ``ErrorFeedback`` — beyond-paper EF residual compensation making the
@@ -31,8 +33,9 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core import lora, messages
-from repro.core.messages import is_packed_leaf
+from repro.core.messages import is_packed_leaf, is_wire_leaf
 from repro.core.quant import QuantConfig
+from repro.core.sparse import is_sparse_leaf
 from repro.kernels import ops as kops
 
 Array = jax.Array
@@ -65,18 +68,39 @@ def fedavg_quantized(stacked: Any, weights: Array, qcfg: QuantConfig) -> Any:
 
 
 def fedavg_packed(msgs: list[Any], weights: Array) -> Any:
-    """Weighted mean over K PACKED wire messages, fused.
+    """Weighted mean over K PACKED (or sparse) wire messages, fused.
 
     Per quantized leaf, the K (C, Nw) uint32 payloads are stacked and fed
     to the ``dequant_agg`` Pallas kernel with normalized weights: unpack +
     dequant + reduce happen in one VMEM pass, never materializing the K
-    fp32 client trees. Unquantized (fp passthrough) leaves take the plain
-    weighted mean. Numerically equal (fp32 tolerance) to
-    ``fedavg_quantized`` on the same client trees.
+    fp32 client trees. SPARSE leaves (FLASC top-k uplinks) dequantize
+    their k survivors and SCATTER-ADD into a dense fp32 buffer — the
+    dense K-client stack is never materialized either, only one dense
+    accumulator per leaf. Unquantized (fp passthrough) leaves take the
+    plain weighted mean. Numerically equal (fp32 tolerance) to
+    ``fedavg_quantized`` on the same client trees (dense case).
     """
     w = weights / jnp.sum(weights)
 
     def agg(*leaves):
+        if any(is_sparse_leaf(m) for m in leaves):
+            # a buffer can MIX sparse and dense leaves at one position
+            # (e.g. FedBuff spanning a density-annealing boundary):
+            # all sparse clients land in ONE batched scatter-add over
+            # their concatenated (index, pre-weighted value) lists;
+            # dense stragglers add in full
+            l0 = next(m for m in leaves if is_sparse_leaf(m))
+            acc = jnp.zeros((l0.n,), jnp.float32)
+            pairs = [(m.idx, w[i].astype(jnp.float32) * m.values())
+                     for i, m in enumerate(leaves) if is_sparse_leaf(m)]
+            acc = acc.at[jnp.concatenate([p[0] for p in pairs])].add(
+                jnp.concatenate([p[1] for p in pairs]))
+            for i, m in enumerate(leaves):
+                if not is_sparse_leaf(m):
+                    d = messages.unpack_message(m)
+                    acc = acc + (w[i].astype(jnp.float32)
+                                 * d.astype(jnp.float32).reshape(-1))
+            return acc.reshape(l0.shape).astype(l0.dtype)
         if is_packed_leaf(leaves[0]):
             l0 = leaves[0]
             out = kops.dequant_agg(
@@ -91,13 +115,13 @@ def fedavg_packed(msgs: list[Any], weights: Array) -> Any:
         wr = w.reshape((-1,) + (1,) * (x.ndim - 1)).astype(jnp.float32)
         return jnp.sum(x * wr, axis=0).astype(leaves[0].dtype)
 
-    return jax.tree.map(agg, *msgs, is_leaf=is_packed_leaf)
+    return jax.tree.map(agg, *msgs, is_leaf=is_wire_leaf)
 
 
 def message_is_packed(msg: Any) -> bool:
-    """True if any leaf of `msg` is a PackedLeaf (wire-form message)."""
-    return any(is_packed_leaf(l) for l in
-               jax.tree.leaves(msg, is_leaf=is_packed_leaf))
+    """True if any leaf of `msg` is in wire form (packed or sparse)."""
+    return any(is_wire_leaf(l) for l in
+               jax.tree.leaves(msg, is_leaf=is_wire_leaf))
 
 
 # ---------------------------------------------------------------------------
@@ -130,7 +154,10 @@ def fedavg_hetero(msgs: list[Any], weights: Array, r_target: int) -> Any:
     for r, idxs in bucket_by_rank(msgs).items():
         bmsgs = [msgs[i] for i in idxs]
         bw = jnp.asarray([w[i] for i in idxs])
-        if message_is_packed(bmsgs[0]):
+        # ANY wire-form message routes the bucket through the wire path
+        # (fedavg_packed also absorbs raw fp trees leaf-wise, so a
+        # density-annealing boundary inside one bucket is order-safe)
+        if any(message_is_packed(m) for m in bmsgs):
             mean_b = fedavg_packed(bmsgs, bw)
         else:
             mean_b = fedavg(stack_trees(bmsgs), bw)
@@ -226,18 +253,22 @@ def ef_encode(tree: Any, residual: Any, qcfg: QuantConfig
     return recon, new_res
 
 
-def ef_encode_packed(tree: Any, residual: Any, qcfg: QuantConfig
-                     ) -> tuple[Any, Any]:
+def ef_encode_packed(tree: Any, residual: Any, qcfg: QuantConfig,
+                     density: Optional[float] = None) -> tuple[Any, Any]:
     """Wire-true EF uplink: pack Q(x + e), keep e' = (x + e) - deq(msg).
 
     Returns (packed wire message, new_residual) — the client computes its
     residual from the same packed payload the server will dequantize, so
-    compensation is exact w.r.t. the wire format."""
-    if not qcfg.enabled:
+    compensation is exact w.r.t. the wire format. With a sparse wire
+    (``density < 1``) the reconstruction is zero at the dropped
+    positions, so e' automatically absorbs the FULL dropped mass on top
+    of the survivors' quantization error (the FLASC EF rule)."""
+    sparse_on = density is not None and density < 1.0
+    if not qcfg.enabled and not sparse_on:
         return tree, residual
     comp = jax.tree.map(lambda x, e: x.astype(jnp.float32) + e,
                         tree, residual)
-    msg = messages.pack_message(comp, qcfg)
+    msg = messages.pack_message(comp, qcfg, density=density)
     recon = messages.unpack_message(msg)
     new_res = jax.tree.map(lambda c, r: c - r.astype(jnp.float32),
                            comp, recon)
@@ -245,12 +276,26 @@ def ef_encode_packed(tree: Any, residual: Any, qcfg: QuantConfig
     # the wire message must advertise the ORIGINAL adapter dtypes (comp is
     # fp32), or the aggregated global tree silently promotes to fp32
     def redtype(m, x):
-        if is_packed_leaf(m):
+        if is_wire_leaf(m):
             return dataclasses.replace(m, dtype=x.dtype)
         return m.astype(x.dtype)
 
-    msg = jax.tree.map(redtype, msg, tree, is_leaf=is_packed_leaf)
+    msg = jax.tree.map(redtype, msg, tree, is_leaf=is_wire_leaf)
     return msg, new_res
+
+
+def ef_fold_dropped(residual: Any, msg: Any) -> Any:
+    """Fold an UNDELIVERED uplink back into its sender's EF residual.
+
+    After ``ef_encode_packed`` the stored residual is
+    ``e' = (x + e) - deq(msg)`` — it presumes ``msg`` was delivered. If
+    the server discards the message (straggler policy), the correct
+    memory is the full compensated signal ``x + e = e' + deq(msg)``, so
+    the client's NEXT uplink re-ships the lost mass and the quantizer
+    stays unbiased-in-time."""
+    return jax.tree.map(
+        lambda e, m: e + m.astype(jnp.float32),
+        residual, messages.unpack_message(msg))
 
 
 # ---------------------------------------------------------------------------
@@ -286,8 +331,8 @@ class FedAvgAggregator:
 
     def _check_bits(self, msg: Any) -> None:
         if message_is_packed(msg) and self.qcfg.enabled:
-            for leaf in jax.tree.leaves(msg, is_leaf=is_packed_leaf):
-                if is_packed_leaf(leaf) and leaf.bits != self.qcfg.bits:
+            for leaf in jax.tree.leaves(msg, is_leaf=is_wire_leaf):
+                if is_wire_leaf(leaf) and leaf.bits != self.qcfg.bits:
                     raise ValueError(
                         f"aggregator configured for {self.qcfg.bits}-"
                         f"bit messages, got {leaf.bits}-bit payload")
@@ -306,7 +351,7 @@ class FedAvgAggregator:
         target, hetero = self._round_rank(msgs)
         if hetero:
             return fedavg_hetero(msgs, weights, target)
-        if message_is_packed(msgs[0]):
+        if any(message_is_packed(m) for m in msgs):
             return fedavg_packed(msgs, weights)
         return fedavg(stack_trees(msgs), weights)
 
@@ -432,7 +477,10 @@ class FedBuffAggregator:
             target = max(self.r_target or 0, max(ranks))
             if len(ranks) > 1 or ranks != {target}:
                 return fedavg_hetero(msgs, w, target)
-        if message_is_packed(msgs[0]):
+        # ANY wire-form message selects the wire path: a FedBuff buffer
+        # spanning a density-annealing boundary can hold a raw fp tree
+        # (density 1.0, quant off) FIRST and sparse messages later
+        if any(message_is_packed(m) for m in msgs):
             return fedavg_packed(msgs, w)
         return fedavg(stack_trees(msgs), w)
 

@@ -21,6 +21,7 @@ import jax.numpy as jnp
 
 from repro.core import aggregation, lora, messages
 from repro.core.quant import QuantConfig
+from repro.core.sparse import SparsityConfig
 
 Array = jax.Array
 
@@ -80,12 +81,16 @@ class RankSchedule:
     def rank_for(self, cid: int, rnd: int = 0) -> int:
         """Client cid's rank at round ``rnd``. The ``min_rank`` floor
         only applies to annealed shrinkage — a configured base rank
-        below ``min_rank`` is honored as-is."""
+        below ``min_rank`` is honored as-is, so the effective floor is
+        ``min(min_rank, base)``. With that floor the annealed rank can
+        never exceed the base rank (anneal_factor <= 1, validated in
+        ``__post_init__``), which the old trailing ``min(r, base)``
+        clamp re-imposed redundantly."""
         r = self.client_ranks[cid]
         if self.anneal_every > 0:
-            r = max(self.min_rank,
+            r = max(min(self.min_rank, r),
                     int(r * self.anneal_factor ** (rnd // self.anneal_every)))
-        return min(r, self.client_ranks[cid])
+        return r
 
     def ranks_at(self, rnd: int) -> tuple[int, ...]:
         return tuple(self.rank_for(c, rnd) for c in
@@ -102,6 +107,9 @@ class FLoCoRAConfig:
     # heterogeneous fleets: per-client rank profile (None = every client
     # trains at `rank`, the paper's uniform setting)
     rank_schedule: Optional[RankSchedule] = None
+    # FLASC-style top-k sparsification of the client UPLINK (None = dense
+    # wire, the paper's setting); downlinks always travel dense
+    sparsity: Optional[SparsityConfig] = None
 
     def __post_init__(self):
         if self.rank_schedule is not None \
@@ -109,10 +117,28 @@ class FLoCoRAConfig:
             raise ValueError(
                 f"rank_schedule max rank {self.rank_schedule.max_rank} "
                 f"exceeds the server rank {self.rank}")
+        if self.sparsity is not None and self.sparsity.enabled \
+                and self.sparsity.require_ef and not self.error_feedback:
+            raise ValueError(
+                "SparsityConfig(require_ef=True) needs error_feedback=True"
+                " — FLASC keeps accuracy only when the dropped mass rides"
+                " the EF residual; set require_ef=False to run sparse"
+                " without EF (and accept the bias)")
 
     @property
     def qcfg(self) -> QuantConfig:
         return QuantConfig(bits=self.quant_bits)
+
+    @property
+    def sparsity_active(self) -> bool:
+        """True when any round's uplink can be sparse."""
+        return self.sparsity is not None and self.sparsity.enabled
+
+    def uplink_density(self, rnd: int = 0) -> Optional[float]:
+        """Round ``rnd``'s uplink density; None = dense wire."""
+        if not self.sparsity_active:
+            return None
+        return self.sparsity.density_at(rnd)
 
     @property
     def scale(self) -> float:
@@ -145,22 +171,29 @@ def broadcast(global_trainable: Any, cfg: FLoCoRAConfig,
 
 
 def client_uplink(trainable: Any, cfg: FLoCoRAConfig,
-                  ef_residual: Optional[Any] = None
-                  ) -> tuple[Any, Optional[Any]]:
+                  ef_residual: Optional[Any] = None,
+                  rnd: int = 0) -> tuple[Any, Optional[Any]]:
     """Step (3): one client's WIRE message (packed payloads when
-    quantization is on; the raw fp tree otherwise).
+    quantization is on, sparse top-k payloads when a ``sparsity``
+    profile is set — ``rnd`` resolves the annealed density; the raw fp
+    tree otherwise).
 
     With error feedback enabled, the client compensates its own previous
-    quantization error (beyond-paper option); pass the stored residual
-    (``None`` initializes a zero residual). Returns (message, residual)."""
-    if cfg.error_feedback and cfg.qcfg.enabled:
+    compression error — quantization noise AND top-k-dropped mass
+    (beyond-paper option; REQUIRED by default for sparse uplinks); pass
+    the stored residual (``None`` initializes a zero residual). Returns
+    (message, residual)."""
+    density = cfg.uplink_density(rnd)
+    wire_on = cfg.qcfg.enabled or (density is not None and density < 1.0)
+    if cfg.error_feedback and wire_on:
         if ef_residual is None:
             ef_residual = aggregation.ef_init(trainable)
         return aggregation.ef_encode_packed(trainable, ef_residual,
-                                            cfg.qcfg)
-    if not cfg.qcfg.enabled:
+                                            cfg.qcfg, density=density)
+    if not wire_on:
         return trainable, ef_residual
-    return messages.pack_message(trainable, cfg.qcfg), ef_residual
+    return messages.pack_message(trainable, cfg.qcfg,
+                                 density=density), ef_residual
 
 
 def server_round(stacked_client_trainables: Any, weights: Array,
@@ -176,21 +209,26 @@ def server_round(stacked_client_trainables: Any, weights: Array,
 
 
 def round_wire_bytes(trainable: Any, cfg: FLoCoRAConfig,
-                     rank: Optional[int] = None) -> dict:
-    """Per-round, PER-CLIENT message accounting (both directions equal).
-    With heterogeneous ranks the size depends on the client's rank."""
-    one_way = client_wire_bytes(trainable, cfg, rank)
-    return {"down_bytes": one_way, "up_bytes": one_way,
-            "round_bytes": 2 * one_way}
+                     rank: Optional[int] = None, rnd: int = 0) -> dict:
+    """Per-round, PER-CLIENT message accounting. The two directions are
+    equal on a dense wire; with a sparsity profile the uplink shrinks to
+    the round's density (downlinks always travel dense)."""
+    down = client_wire_bytes(trainable, cfg, rank)
+    up = client_wire_bytes(trainable, cfg, rank,
+                           density=cfg.uplink_density(rnd))
+    return {"down_bytes": down, "up_bytes": up,
+            "round_bytes": down + up}
 
 
 def client_wire_bytes(trainable: Any, cfg: FLoCoRAConfig,
-                      rank: Optional[int] = None) -> int:
+                      rank: Optional[int] = None,
+                      density: Optional[float] = None) -> int:
     """One direction of one round for a client at ``rank`` (static
-    accounting over the resized adapter shapes)."""
+    accounting over the resized adapter shapes). ``density`` selects the
+    sparse-uplink accounting (None = dense)."""
     if rank is not None:
         trainable = lora.resize_tree_rank(trainable, rank, method="slice")
-    return messages.message_wire_bytes(trainable, cfg.qcfg)
+    return messages.message_wire_bytes(trainable, cfg.qcfg, density)
 
 
 def tcc(trainable: Any, cfg: FLoCoRAConfig, rounds: int) -> int:
@@ -201,15 +239,24 @@ def tcc(trainable: Any, cfg: FLoCoRAConfig, rounds: int) -> int:
 def fleet_tcc_bytes(trainable: Any, cfg: FLoCoRAConfig, rounds: int) -> int:
     """Fleet-level TCC: heterogeneous uplinks+downlinks summed over every
     client and round of the schedule (replaces Eq. 2's uniform
-    ``2 * one_way * rounds`` when a rank profile is set)."""
+    ``2 * one_way * rounds`` when a rank profile or a sparsity profile
+    is set — sparse uplinks and dense downlinks are sized separately,
+    per round so density annealing is honored)."""
     sched = cfg.rank_schedule
-    if sched is None:
+    if sched is None and not cfg.sparsity_active:
         return messages.tcc_bytes(trainable, cfg.qcfg, rounds)
-    by_rank: dict[int, int] = {}
+    cache: dict[tuple, int] = {}
+
+    def sized(r: Optional[int], density: Optional[float]) -> int:
+        key = (r, density)
+        if key not in cache:
+            cache[key] = client_wire_bytes(trainable, cfg, r, density)
+        return cache[key]
+
     total = 0
     for rnd in range(rounds):
-        for r in sched.ranks_at(rnd):
-            if r not in by_rank:
-                by_rank[r] = client_wire_bytes(trainable, cfg, r)
-            total += 2 * by_rank[r]
+        density = cfg.uplink_density(rnd)
+        ranks = sched.ranks_at(rnd) if sched is not None else (None,)
+        for r in ranks:
+            total += sized(r, None) + sized(r, density)
     return total

@@ -18,6 +18,13 @@ Two codecs share the quantization math:
     payloads (the Pallas ``quant_pack`` layout) + fp32 sidecars, and
     serializes to exactly ``message_wire_bytes`` bytes via ``to_wire``.
 
+Sparse uplinks (wire v3, FLASC-style — see ``core/sparse.py``): with a
+``density < 1`` the quantizable leaves become :class:`SparseLeaf`
+instead — per-tensor magnitude top-k indices + the survivors run through
+the SAME affine quantizer — and every accounting/serialization helper
+here handles both leaf kinds. ``density=None`` (or 1.0) is the exact
+dense path, byte-for-byte.
+
 ``wire_bytes`` is the static accounting used by the TCC benchmarks; the
 packed codec is validated against it buffer-for-buffer (tier-1 tests).
 """
@@ -30,8 +37,9 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core import quant
+from repro.core import quant, sparse
 from repro.core.quant import QuantConfig
+from repro.core.sparse import SparseLeaf, is_sparse_leaf
 from repro.kernels import ops as kops
 from repro.kernels import ref as kref
 
@@ -127,11 +135,23 @@ def leaf_wire_bytes(shape: tuple[int, ...], bits: Optional[int],
     return payload + channels * 2 * quant.FP_BYTES
 
 
-def message_wire_bytes(tree: Any, cfg: QuantConfig) -> int:
-    """Bytes for one direction of one round (paper's message size)."""
+def message_wire_bytes(tree: Any, cfg: QuantConfig,
+                       density: Optional[float] = None) -> int:
+    """Bytes for one direction of one round (paper's message size).
+
+    ``density < 1`` switches the quantizable (>= 2-D) leaves to the
+    sparse accounting (``sparse.sparse_leaf_wire_bytes``); 1-D leaves
+    always travel dense fp32, mirroring ``pack_message``."""
     bits = cfg.bits if cfg.enabled else None
-    return sum(leaf_wire_bytes(tuple(x.shape), bits, cfg.per_stack)
-               for x in jax.tree.leaves(tree))
+    sparse_on = density is not None and density < 1.0
+    total = 0
+    for x in jax.tree.leaves(tree):
+        if sparse_on and quantizable(x):
+            total += sparse.sparse_leaf_wire_bytes(tuple(x.shape), bits,
+                                                   density)
+        else:
+            total += leaf_wire_bytes(tuple(x.shape), bits, cfg.per_stack)
+    return total
 
 
 def tcc_bytes(tree: Any, cfg: QuantConfig, rounds: int) -> int:
@@ -271,21 +291,38 @@ def is_packed_leaf(t: Any) -> bool:
     return isinstance(t, PackedLeaf)
 
 
+def is_wire_leaf(t: Any) -> bool:
+    """True for any wire-form leaf (dense packed or sparse top-k)."""
+    return isinstance(t, (PackedLeaf, SparseLeaf))
+
+
 def pack_message(tree: Any, cfg: QuantConfig, *,
-                 use_kernel: bool = True) -> Any:
+                 use_kernel: bool = True,
+                 density: Optional[float] = None) -> Any:
     """Trainable tree -> wire message with real packed payloads.
 
     Quantizable leaves become :class:`PackedLeaf` (uint32 words + fp32
     sidecars via the fused Pallas ``quant_pack``); 1-D leaves pass through
     in fp32. ``use_kernel=False`` selects the pure-jnp twin (identical
     output; needed under vmap, e.g. the per-pod packing in launch).
+
+    ``density < 1`` selects the FLASC-style sparse wire instead: each
+    quantizable leaf becomes a :class:`SparseLeaf` (per-tensor top-k
+    indices + the survivors through the same quantizer — per-tensor
+    qparams, so ``per_stack`` does not apply). ``density`` of None or
+    1.0 is the exact dense fallback.
     """
-    if not cfg.enabled:
+    sparse_on = density is not None and density < 1.0
+    if not cfg.enabled and not sparse_on:
         return tree
 
     def pk(x):
         if not quantizable(x):
             return x
+        if sparse_on:
+            return sparse.sparsify_leaf(x, density,
+                                        cfg.bits if cfg.enabled else None,
+                                        use_kernel=use_kernel)
         x2d = _to_channel_2d(x, cfg.per_stack)
         if use_kernel:
             payload, scale, zp = kops.quant_pack(x2d, cfg.bits)
@@ -298,31 +335,36 @@ def pack_message(tree: Any, cfg: QuantConfig, *,
 
 
 def unpack_message(msg: Any) -> Any:
-    """Wire message -> fp tree (shape/dtype recorded in each leaf)."""
+    """Wire message -> fp tree (shape/dtype recorded in each leaf).
+    Sparse leaves densify (zeros at the dropped positions)."""
 
     def up(t):
+        if is_sparse_leaf(t):
+            return t.densify()
         if not is_packed_leaf(t):
             return t
         lv = kref.unpack_words(t.payload, t.bits)[:, :t.n_per_channel]
         x2d = (lv.astype(jnp.float32) - t.zp[:, None]) * t.scale[:, None]
         return _from_channel_2d(x2d, t.shape, t.per_stack).astype(t.dtype)
 
-    return jax.tree.map(up, msg, is_leaf=is_packed_leaf)
+    return jax.tree.map(up, msg, is_leaf=is_wire_leaf)
 
 
 # ---------------------------------------------------------------------------
-# Wire header: every serialized message leads with a fixed 16-byte header
-# carrying the sender's adapter RANK, so a heterogeneous-rank server can
-# route a message to the right aggregation bucket before deserializing a
-# single payload. The header is a fixed transport framing cost and is NOT
+# Wire header: every serialized message leads with a fixed 20-byte header
+# carrying the sender's adapter RANK and the message DENSITY, so a
+# heterogeneous-rank server can route a message to the right aggregation
+# bucket (and pick the sparse decode path) before deserializing a single
+# payload. The header is a fixed transport framing cost and is NOT
 # part of ``message_wire_bytes``/``packed_wire_bytes`` — those reproduce
 # the paper's payload accounting (Tables III/IV) byte-exactly.
 # ---------------------------------------------------------------------------
 
 WIRE_MAGIC = 0x464C4F43          # "FLOC"
-WIRE_VERSION = 2                 # v2: rank-tagged heterogeneous messages
+WIRE_VERSION = 3                 # v3: + density field (sparse-delta wire)
 HEADER_KEY = "__header__"
-HEADER_BYTES = 16                # 4 x uint32: magic, version, rank, bits
+HEADER_BYTES = 20        # 5 x uint32: magic, version, rank, bits, density
+DENSITY_ONE = 1_000_000          # density is carried in parts-per-million
 
 
 def message_rank(msg: Any) -> int:
@@ -334,42 +376,60 @@ def message_rank(msg: Any) -> int:
     return 0 if r is None else int(r)
 
 
-def wire_header(rank: int, bits: Optional[int]) -> np.ndarray:
-    """The leading uint32[4] buffer of a serialized message."""
-    return np.asarray([WIRE_MAGIC, WIRE_VERSION, rank, bits or 0],
-                      np.uint32)
+def message_density(msg: Any) -> float:
+    """Density advertised by a wire message: the configured density of
+    its sparse leaves, 1.0 for dense (packed or fp) messages."""
+    for leaf in jax.tree.leaves(msg, is_leaf=is_wire_leaf):
+        if is_sparse_leaf(leaf):
+            return float(leaf.density)
+    return 1.0
+
+
+def wire_header(rank: int, bits: Optional[int],
+                density: float = 1.0) -> np.ndarray:
+    """The leading uint32[5] buffer of a serialized message."""
+    return np.asarray([WIRE_MAGIC, WIRE_VERSION, rank, bits or 0,
+                       int(round(density * DENSITY_ONE))], np.uint32)
 
 
 def parse_wire_header(buf: np.ndarray) -> dict:
-    """Validate + decode the header -> {'rank': int, 'bits': int|None}."""
+    """Validate + decode the header ->
+    {'rank': int, 'bits': int|None, 'density': float}.
+
+    Accepts the 16-byte v2 form (no density word -> density 1.0), so
+    pre-sparse senders interoperate."""
     h = np.asarray(buf, np.uint32).reshape(-1)
-    if h.shape[0] != 4 or int(h[0]) != WIRE_MAGIC:
+    if h.shape[0] not in (4, 5) or int(h[0]) != WIRE_MAGIC:
         raise ValueError("not a FLoCoRA wire message (bad magic)")
     if int(h[1]) > WIRE_VERSION:
         raise ValueError(f"wire version {int(h[1])} is newer than this "
                          f"codec (v{WIRE_VERSION})")
     bits = int(h[3])
+    density = int(h[4]) / DENSITY_ONE if h.shape[0] == 5 else 1.0
     return {"version": int(h[1]), "rank": int(h[2]),
-            "bits": bits if bits else None}
+            "bits": bits if bits else None, "density": density}
 
 
 def message_to_wire(msg: Any, include_header: bool = True
                     ) -> list[tuple[str, dict]]:
-    """Serialize a packed message to named host buffers (uplink form).
+    """Serialize a packed/sparse message to named host buffers (uplink
+    form).
 
-    The first entry is the rank-tagged wire header (``HEADER_KEY``)
-    unless ``include_header=False``."""
+    The first entry is the rank+density-tagged wire header
+    (``HEADER_KEY``) unless ``include_header=False``."""
     from repro.utils.tree import _path_str
     flat, _ = jax.tree_util.tree_flatten_with_path(
-        msg, is_leaf=is_packed_leaf)
+        msg, is_leaf=is_wire_leaf)
     out = []
     if include_header:
         bits = next((leaf.bits for _, leaf in flat
-                     if is_packed_leaf(leaf)), None)
+                     if is_wire_leaf(leaf) and leaf.bits is not None),
+                    None)
         out.append((HEADER_KEY,
-                    {"header": wire_header(message_rank(msg), bits)}))
+                    {"header": wire_header(message_rank(msg), bits,
+                                           message_density(msg))}))
     for path, leaf in flat:
-        if is_packed_leaf(leaf):
+        if is_wire_leaf(leaf):
             out.append((_path_str(path), leaf.to_wire()))
         else:
             out.append((_path_str(path),
@@ -377,10 +437,38 @@ def message_to_wire(msg: Any, include_header: bool = True
     return out
 
 
+def message_from_wire(entries: list[tuple[str, dict]], like: Any) -> Any:
+    """Rebuild a wire message from ``message_to_wire`` buffers.
+
+    ``like`` is a template message with the same structure (its leaves
+    supply the static shape/dtype/bits/per_stack/density metadata; its
+    array contents are ignored). The inverse of ``message_to_wire`` up
+    to the header entry, which is validated and discarded."""
+    from repro.utils.tree import _path_str
+    bufs = dict(entries)
+    if HEADER_KEY in bufs:
+        parse_wire_header(bufs[HEADER_KEY]["header"])
+    flat, treedef = jax.tree_util.tree_flatten_with_path(
+        like, is_leaf=is_wire_leaf)
+    leaves = []
+    for path, leaf in flat:
+        b = bufs[_path_str(path)]
+        if is_packed_leaf(leaf):
+            leaves.append(PackedLeaf.from_wire(
+                b, leaf.shape, leaf.dtype, leaf.bits, leaf.per_stack))
+        elif is_sparse_leaf(leaf):
+            leaves.append(SparseLeaf.from_wire(
+                b, leaf.shape, leaf.dtype, leaf.bits, leaf.density))
+        else:
+            leaves.append(jnp.asarray(b["payload"]).reshape(
+                leaf.shape).astype(leaf.dtype))
+    return jax.tree_util.tree_unflatten(treedef, leaves)
+
+
 def packed_wire_bytes(msg: Any) -> int:
     """Payload bytes on the wire, MEASURED from the real serialized
     buffers (not shape math) — the cross-check for
-    ``message_wire_bytes``. Excludes the fixed 16-byte header, matching
+    ``message_wire_bytes``. Excludes the fixed 20-byte header, matching
     the paper's accounting."""
     total = 0
     for name, bufs in message_to_wire(msg):

@@ -71,9 +71,15 @@ def affine_qparams(x: Array, bits: int, channel_axis: int = 0,
     xmin = jnp.min(xf, axis=1)
     xmax = jnp.max(xf, axis=1)
     if symmetric:
+        # restricted-range symmetric: levels [0, qmax-1] centred on the
+        # integer zero-point (qmax-1)/2, so 0 AND BOTH extremes ±amax are
+        # exactly representable. The naive scale = 2*amax/qmax maps +amax
+        # to level qmax+1 (clipped: the peak dequantizes short by
+        # ~amax/qmax while -amax overshoots) — one top level is the price
+        # of a saturation-free grid.
         amax = jnp.maximum(jnp.abs(xmin), jnp.abs(xmax))
-        scale = jnp.where(amax > 0, (2.0 * amax) / qmax, 1.0)
-        zp = jnp.full_like(scale, (qmax + 1) // 2)
+        scale = jnp.where(amax > 0, (2.0 * amax) / (qmax - 1), 1.0)
+        zp = jnp.full_like(scale, (qmax - 1) // 2)
     else:
         # make sure 0 is representable (standard affine convention)
         xmin = jnp.minimum(xmin, 0.0)

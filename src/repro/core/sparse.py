@@ -1,0 +1,264 @@
+"""FLASC-style sparse-delta wire format: top-k over the packed codec.
+
+"Federated LoRA with Sparse Communication" (Kuo et al. 2024) shows that
+TOP-K sparsifying the LoRA adapter deltas composes multiplicatively with
+affine quantization: the surviving values still quantize to 2/4/8-bit
+levels, and only the surviving positions travel. This module supplies
+the pieces the codec (``core/messages.py``) and the aggregators
+(``core/aggregation.py``) assemble into the end-to-end sparse uplink:
+
+  * :class:`SparsityConfig` — density (fraction of entries kept per
+    tensor), optional round-wise annealing, and the FLASC EF-required
+    flag (sparse uplinks keep accuracy only when the dropped mass is
+    routed into the error-feedback residual);
+  * :func:`sparsify_leaf` — per-tensor magnitude top-k of one message
+    tensor; the surviving values run through the SAME affine quantizer
+    as the dense codec (the ``quant_pack`` kernel path), so sparsity and
+    2/4/8-bit quantization compose;
+  * :class:`SparseLeaf` — the wire form: sorted uint32 flat indices (or
+    an n-bit occupancy bitmap, whichever is smaller) + the quantized
+    value payload + fp32 sidecars. ``to_wire``/``from_wire`` serialize
+    to exactly :func:`sparse_leaf_wire_bytes` bytes.
+
+Quantization of the survivors is PER-TENSOR (one scale/zero-point pair
+per leaf): top-k destroys the channel structure the dense codec's
+per-channel qparams rely on, and the k survivors of one tensor share a
+magnitude range by construction. ``per_stack`` therefore does not apply
+to sparse leaves.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import quant
+from repro.kernels import ops as kops
+from repro.kernels import ref as kref
+
+Array = jax.Array
+
+
+@dataclasses.dataclass(frozen=True)
+class SparsityConfig:
+    """Top-k sparsification of the client UPLINK (FLASC-style).
+
+    ``density`` is the fraction of entries kept per (>= 2-D) message
+    tensor; 1-D leaves always travel dense, like the dense codec's
+    norm-layer rule. With ``anneal_every > 0`` the density is multiplied
+    by ``anneal_factor`` every ``anneal_every`` rounds (floored at
+    ``min_density``) — late-training updates concentrate, so the uplink
+    shrinks as the run converges. ``density == 1.0`` (and no annealing)
+    is the EXACT-PARITY fallback: messages take the dense packed path
+    byte-for-byte.
+
+    ``require_ef`` (default True) makes the config refuse to run without
+    error feedback: FLASC keeps accuracy only when each round's dropped
+    mass enters the client's EF residual and ships later. Set it to
+    False only for engines that cannot maintain residuals (e.g. the
+    async engine) and accept the bias."""
+    density: float = 1.0
+    anneal_every: int = 0
+    anneal_factor: float = 0.5
+    min_density: float = 0.01
+    require_ef: bool = True
+
+    def __post_init__(self):
+        if not 0.0 < self.density <= 1.0:
+            raise ValueError(f"density must be in (0, 1]: {self.density}")
+        if self.anneal_every < 0:
+            raise ValueError("anneal_every must be >= 0")
+        if not 0.0 < self.anneal_factor <= 1.0:
+            raise ValueError("anneal_factor must be in (0, 1]")
+        if not 0.0 < self.min_density <= 1.0:
+            raise ValueError("min_density must be in (0, 1]")
+
+    @property
+    def enabled(self) -> bool:
+        """True when any round's uplink can actually be sparse."""
+        return self.density < 1.0 or self.anneal_every > 0
+
+    def density_at(self, rnd: int) -> float:
+        """Uplink density at round ``rnd``. The ``min_density`` floor
+        only binds annealed shrinkage — a configured base density below
+        the floor is honored as-is (effective floor
+        ``min(min_density, density)``, mirroring RankSchedule)."""
+        d = self.density
+        if self.anneal_every > 0:
+            d = max(min(self.min_density, d),
+                    d * self.anneal_factor ** (rnd // self.anneal_every))
+        return d
+
+
+def keep_count(n: int, density: float) -> int:
+    """Survivors of a ``density`` top-k over ``n`` entries (>= 1)."""
+    return max(1, int(np.ceil(density * n)))
+
+
+def sparse_leaf_wire_bytes(shape: tuple[int, ...], bits: Optional[int],
+                           density: float) -> int:
+    """Static wire accounting for one sparse leaf.
+
+    indices: min(4k uint32 index bytes, ceil(n/8) bitmap bytes) — the
+    serializer picks whichever is smaller, deterministically from the
+    shape; values: ceil(k*bits/8) + one per-tensor (scale, zp) fp32
+    sidecar pair, or 4k bytes when fp."""
+    n = int(np.prod(shape))
+    k = keep_count(n, density)
+    idx_bytes = min(4 * k, (n + 7) // 8)
+    if bits is None:
+        return idx_bytes + k * quant.FP_BYTES
+    return idx_bytes + (k * bits + 7) // 8 + 2 * quant.FP_BYTES
+
+
+def _pack_row(vals: Array, bits: int, use_kernel: bool):
+    """(k,) fp32 survivors -> ((1, Nw) uint32 words, scale (1,), zp (1,))
+    in the kernel layout. ``use_kernel=False`` is the vmap-safe jnp twin
+    (same contract as ``messages._pack_2d_jnp``: word-granular padding
+    only; consumers slice to the first k levels)."""
+    v2d = vals.reshape(1, -1).astype(jnp.float32)
+    if use_kernel:
+        return kops.quant_pack(v2d, bits)
+    scale, zp = kref._qparams_rowwise(v2d, bits)
+    qmax = (1 << bits) - 1
+    q = jnp.clip(jnp.round(v2d / scale[:, None]) + zp[:, None], 0, qmax)
+    per = 32 // bits
+    qp = jnp.pad(q.astype(jnp.uint32),
+                 ((0, 0), (0, (-v2d.shape[1]) % per)))
+    return kref.pack_words(qp, bits), scale, zp
+
+
+@jax.tree_util.register_pytree_node_class
+@dataclasses.dataclass
+class SparseLeaf:
+    """One top-k-sparsified tensor in wire form.
+
+    ``idx`` holds the k surviving FLAT indices into ``shape``, sorted
+    ascending (so the bitmap encoding and the index encoding agree on
+    value order); ``payload`` is the survivors' quantized word row in
+    the ``quant_pack`` kernel layout ((1, Nw) uint32) or, when ``bits``
+    is None, the raw fp32 values (k,). ``shape`` exposes the ORIGINAL
+    tensor shape, so shape-only walks (adapter-pair/rank detection in
+    ``core/lora.py``) work on sparse trees without touching a payload.
+    """
+    idx: Array                    # (k,) int32, ascending flat indices
+    payload: Array                # (1, Nw) uint32 words | (k,) fp32
+    scale: Optional[Array]        # (1,) fp32, None when bits is None
+    zp: Optional[Array]           # (1,) fp32, None when bits is None
+    shape: tuple                  # static: original tensor shape
+    dtype: Any                    # static: original dtype
+    bits: Optional[int]           # static: None = fp survivors
+    density: float = 1.0          # static: configured density (header)
+
+    def tree_flatten(self):
+        return ((self.idx, self.payload, self.scale, self.zp),
+                (self.shape, self.dtype, self.bits, self.density))
+
+    @classmethod
+    def tree_unflatten(cls, aux, children):
+        return cls(*children, *aux)
+
+    @property
+    def k(self) -> int:
+        return int(self.idx.shape[0])
+
+    @property
+    def n(self) -> int:
+        return int(np.prod(self.shape))
+
+    def values(self) -> Array:
+        """The k surviving values, dequantized to fp32."""
+        if self.bits is None:
+            return self.payload.astype(jnp.float32)
+        lv = kref.unpack_words(self.payload, self.bits)[:, : self.k]
+        return ((lv.astype(jnp.float32) - self.zp[:, None])
+                * self.scale[:, None]).reshape(-1)
+
+    def densify(self) -> Array:
+        """Scatter the survivors into a dense tensor (zeros elsewhere)."""
+        dense = jnp.zeros((self.n,), jnp.float32).at[self.idx].set(
+            self.values())
+        return dense.reshape(self.shape).astype(self.dtype)
+
+    # -- serialization (the actual bytes on the wire) -----------------------
+    def _use_bitmap(self) -> bool:
+        """Bitmap wins once density crosses 1/32 (4k > n/8 bytes)."""
+        return 4 * self.k > (self.n + 7) // 8
+
+    def to_wire(self) -> dict[str, np.ndarray]:
+        """Host-side buffers as sent; ``sum(nbytes)`` equals
+        :func:`sparse_leaf_wire_bytes` for this leaf's shape/density."""
+        if self._use_bitmap():
+            mask = np.zeros(self.n, np.bool_)
+            mask[np.asarray(self.idx)] = True
+            out = {"bitmap": np.packbits(mask)}
+        else:
+            out = {"idx": np.asarray(self.idx, np.uint32)}
+        if self.bits is None:
+            out["values"] = np.asarray(self.payload, np.float32)
+            return out
+        lv = kref.unpack_words(self.payload, self.bits)[:, : self.k]
+        out["payload"] = np.asarray(
+            quant.pack_levels(lv.reshape(-1).astype(jnp.uint8), self.bits))
+        out["scale"] = np.asarray(self.scale, np.float32)
+        out["zp"] = np.asarray(self.zp, np.float32)
+        return out
+
+    @classmethod
+    def from_wire(cls, buffers: dict, shape: tuple, dtype,
+                  bits: Optional[int], density: float = 1.0
+                  ) -> "SparseLeaf":
+        """Rebuild the kernel-layout leaf from serialized wire buffers."""
+        n = int(np.prod(shape))
+        if "bitmap" in buffers:
+            mask = np.unpackbits(np.asarray(buffers["bitmap"],
+                                            np.uint8))[:n]
+            idx = np.flatnonzero(mask)
+        else:
+            idx = np.asarray(buffers["idx"], np.int64)
+        idx = jnp.asarray(idx, jnp.int32)
+        k = int(idx.shape[0])
+        if bits is None:
+            return cls(idx, jnp.asarray(buffers["values"], jnp.float32),
+                       None, None, tuple(shape), dtype, None, density)
+        lv = quant.unpack_levels(jnp.asarray(buffers["payload"]), bits, k)
+        # reproduce the kernel layout bit-exactly: zero levels padded to
+        # the (32/bits * 128)-lane multiple, as quant_pack emits
+        lane = (32 // bits) * 128
+        lvp = jnp.pad(lv.astype(jnp.uint32), (0, (-k) % lane))
+        payload = kref.pack_words(lvp.reshape(1, -1), bits)
+        return cls(idx, payload, jnp.asarray(buffers["scale"]),
+                   jnp.asarray(buffers["zp"]), tuple(shape), dtype, bits,
+                   density)
+
+    def wire_bytes(self) -> int:
+        """Real serialized size (measured from the buffers)."""
+        return sum(b.nbytes for b in self.to_wire().values())
+
+
+def is_sparse_leaf(t: Any) -> bool:
+    return isinstance(t, SparseLeaf)
+
+
+def sparsify_leaf(x: Array, density: float, bits: Optional[int],
+                  use_kernel: bool = True) -> SparseLeaf:
+    """Per-tensor magnitude top-k -> :class:`SparseLeaf`.
+
+    Keeps the ``keep_count(n, density)`` largest-|x| entries; survivors
+    quantize per-tensor through the same affine RTN as the dense codec
+    (``quant_pack`` kernel path) when ``bits`` is set."""
+    n = int(np.prod(x.shape))
+    k = keep_count(n, density)
+    flat = x.reshape(-1).astype(jnp.float32)
+    _, idx = jax.lax.top_k(jnp.abs(flat), k)
+    idx = jnp.sort(idx).astype(jnp.int32)   # ascending: bitmap-compatible
+    vals = jnp.take(flat, idx)
+    if bits is None:
+        return SparseLeaf(idx, vals, None, None, tuple(x.shape), x.dtype,
+                          None, density)
+    payload, scale, zp = _pack_row(vals, bits, use_kernel)
+    return SparseLeaf(idx, payload, scale, zp, tuple(x.shape), x.dtype,
+                      bits, density)

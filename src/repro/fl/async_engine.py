@@ -169,6 +169,9 @@ class AsyncFLServer:
             # an EF residual assumes the NEXT encode of the same client
             # compensates the previous one; async staleness breaks that
             # invariant, so fail loudly instead of silently degrading
+            # (this also bars SparsityConfig(require_ef=True) profiles:
+            # async sparse uplinks need require_ef=False, accepting the
+            # top-k bias FLASC's EF would otherwise absorb)
             raise ValueError("error feedback is not supported by the "
                              "async engine")
         sched = fcfg.rank_schedule
@@ -318,7 +321,11 @@ class AsyncFLServer:
         losses = np.asarray(losses)
         for k, rec in enumerate(recs):
             t_k = jax.tree.map(lambda x: x[k], trained)
-            rec.msg, _ = flocora.client_uplink(t_k, self.fcfg)
+            # density keys off the DISPATCH version (rec.version), a
+            # pure function of checkpointed state — resumed runs emit
+            # byte-identical uplinks
+            rec.msg, _ = flocora.client_uplink(t_k, self.fcfg,
+                                               rnd=rec.version)
             rec.loss = float(losses[k])
 
     # -- the event loop -----------------------------------------------------
@@ -336,7 +343,9 @@ class AsyncFLServer:
         rec = self.inflight.pop(idx)
         self.clock = max(self.clock, t_arr)
         staleness = self.version - rec.version
-        self._up_cum += self.wire.uplink_bytes(rec.rank, rec.msg) or 0
+        self._up_cum += self.wire.uplink_bytes(
+            rec.rank, rec.msg,
+            self.fcfg.uplink_density(rec.version)) or 0
         self.n_arrived += 1
         self.aggregator.add(rec.msg, rec.n_k, staleness)
         self._flush_starts.append(rec.start)
@@ -418,10 +427,12 @@ class AsyncFLServer:
         return lora.resize_tree_rank(self.global_train, rank,
                                      method="slice")
 
-    def _msg_template(self, rank: int) -> Any:
-        """Shape/dtype template of a rank-``rank`` packed uplink."""
+    def _msg_template(self, rank: int, version: int = 0) -> Any:
+        """Shape/dtype template of a rank-``rank`` packed/sparse uplink
+        dispatched at global ``version`` (density annealing changes the
+        sparse payload shapes between versions)."""
         zeros = jax.tree.map(jnp.zeros_like, self._start_template(rank))
-        return flocora.client_uplink(zeros, self.fcfg)[0]
+        return flocora.client_uplink(zeros, self.fcfg, rnd=version)[0]
 
     def save(self) -> None:
         if self.ckpt is None:
@@ -467,7 +478,8 @@ class AsyncFLServer:
         for s, m in meta["inflight"].items():
             like[f"inflight_{s}"] = self._start_template(m["rank"])
             if m["has_msg"]:
-                like[f"msg_{s}"] = self._msg_template(m["rank"])
+                like[f"msg_{s}"] = self._msg_template(m["rank"],
+                                                      m["version"])
         trees, _ = restore(self.ckpt.directory, step, like)
         self.global_train = trees["train"]
         self.clock = meta["clock"]

@@ -40,7 +40,7 @@ import numpy as np
 
 from repro.core import flocora, messages
 from repro.core.aggregation import Aggregator, ErrorFeedbackFedAvg, \
-    FedAvgAggregator, FedBuffAggregator
+    FedAvgAggregator, FedBuffAggregator, ef_fold_dropped
 from repro.core.flocora import FLoCoRAConfig
 from repro.checkpoint import CheckpointManager
 from repro.fl.client import ClientConfig, cohort_steps, \
@@ -68,17 +68,18 @@ class ServerConfig:
 
 
 class WireAccounting:
-    """Measured per-rank wire-byte cache, shared by the sync
-    (:class:`FLServer`) and async (``fl/async_engine.AsyncFLServer``)
-    engines. Message size is shape-determined, so ONE measured emission
-    per rank is exact for the whole run; the uplink re-measure
-    cross-checks that EF/quant/rank changes never desynchronize the
-    accounting."""
+    """Measured wire-byte cache, shared by the sync (:class:`FLServer`)
+    and async (``fl/async_engine.AsyncFLServer``) engines. Message size
+    is determined by (rank, uplink density), so ONE measured emission
+    per key is exact for the whole run; the uplink re-measure
+    cross-checks that EF/quant/rank/sparsity changes never desynchronize
+    the accounting. Downlinks always travel dense, so their cache keys
+    stay per-rank."""
 
     def __init__(self, fcfg: FLoCoRAConfig):
         self.fcfg = fcfg
         self.down: dict[int, int] = {}
-        self.up: dict[int, int] = {}
+        self.up: dict[tuple[int, Optional[float]], int] = {}
 
     def bcast_rank(self, rank: int) -> Optional[int]:
         """None keeps the uniform fleet's broadcast byte-identical to the
@@ -94,13 +95,14 @@ class WireAccounting:
             self.down[rank] = got
         return got
 
-    def uplink_bytes(self, rank: int, msg: Any = None) -> Optional[int]:
-        """None when no uplink was emitted at this rank yet (callers
-        fall back to the symmetric downlink size)."""
-        got = self.up.get(rank)
+    def uplink_bytes(self, rank: int, msg: Any = None,
+                     density: Optional[float] = None) -> Optional[int]:
+        """None when no uplink was emitted at this (rank, density) yet
+        (callers fall back to the symmetric downlink size)."""
+        got = self.up.get((rank, density))
         if got is None and msg is not None:
             got = messages.packed_wire_bytes(msg)
-            self.up[rank] = got
+            self.up[(rank, density)] = got
         return got
 
 
@@ -139,7 +141,10 @@ class FLServer:
             raise ValueError(
                 f"rank_schedule covers {self.rank_schedule.n_clients} "
                 f"clients, server has {scfg.n_clients}")
-        ef_wanted = fcfg.error_feedback and fcfg.qcfg.enabled
+        # EF engages when the uplink is actually lossy: quantized and/or
+        # sparse (a sparse-only fp wire still drops mass to compensate)
+        ef_wanted = fcfg.error_feedback and (fcfg.qcfg.enabled
+                                             or fcfg.sparsity_active)
         if aggregator is None:
             aggregator = ErrorFeedbackFedAvg(fcfg.qcfg, fcfg.rank) \
                 if ef_wanted else FedAvgAggregator(fcfg.qcfg, fcfg.rank)
@@ -224,8 +229,9 @@ class FLServer:
     def _downlink_bytes(self, rank: int) -> int:
         return self.wire.downlink_bytes(self.global_train, rank)
 
-    def _uplink_bytes(self, rank: int, msg: Any = None) -> int:
-        got = self.wire.uplink_bytes(rank, msg)
+    def _uplink_bytes(self, rank: int, msg: Any = None,
+                      density: Optional[float] = None) -> int:
+        got = self.wire.uplink_bytes(rank, msg, density)
         if got is None:               # no uplink emitted yet at this rank
             return self._downlink_bytes(rank)
         return got
@@ -305,6 +311,7 @@ class FLServer:
             buckets.setdefault(rank_of[cid], []).append(cid)
         latency = {cid: self.rng.exponential(1.0) for cid in survivors}
         ef = isinstance(self.aggregator, ErrorFeedbackFedAvg)
+        density = fcfg.uplink_density(rnd)
         results = []
         for r in sorted(buckets):
             cids = buckets[r]
@@ -326,19 +333,29 @@ class FLServer:
             for k, cid in enumerate(cids):
                 t_k = jax.tree.map(lambda x: x[k], trained)
                 res = self.aggregator.residual(cid, t_k) if ef else None
-                msg, res = flocora.client_uplink(t_k, fcfg, res)
-                if ef:
-                    self.aggregator.store_residual(cid, res)
+                msg, res = flocora.client_uplink(t_k, fcfg, res, rnd=rnd)
                 n_i = len(next(iter(datas[k].values())))
                 results.append((latency[cid], n_i, msg,
-                                float(losses[k]), r))
+                                float(losses[k]), r, cid, res))
 
         # every survivor transmitted its uplink (stragglers included)
-        up_bytes = sum(self._uplink_bytes(r[4], r[2]) for r in results)
+        up_bytes = sum(self._uplink_bytes(r[4], r[2], density)
+                       for r in results)
 
         # straggler policy: first K arrivals win
         results.sort(key=lambda r: r[0])
         kept = results[:k_target]
+        if ef:
+            # residuals commit AFTER the straggler cut: a kept client's
+            # residual assumes delivery (e' = comp - deq(msg)); a
+            # straggled client's message was DISCARDED, so its whole
+            # reconstruction folds back into the residual and the next
+            # uplink re-ships the lost mass (unbiased-in-time)
+            for rec_i in kept:
+                self.aggregator.store_residual(rec_i[5], rec_i[6])
+            for rec_i in results[k_target:]:
+                self.aggregator.store_residual(
+                    rec_i[5], ef_fold_dropped(rec_i[6], rec_i[2]))
         weights = jnp.asarray([r[1] for r in kept], jnp.float32)
         # (4) aggregation strategy; packed inputs lower onto the fused
         # dequant+reduce kernel, per rank bucket when the cohort is mixed
@@ -360,10 +377,13 @@ class FLServer:
                # measured heterogeneous sums, incl. the shared-once
                # initial model (replaces Eq. 2's 2 * one_way * rounds)
                "tcc_bytes": self._tcc_cum}
-        if fcfg.qcfg.enabled:
+        if fcfg.qcfg.enabled or density is not None:
             rec["up_bytes_measured"] = self._uplink_bytes(
-                max(kept_ranks, key=kept_ranks.get))
-            rec["up_bytes_by_rank"] = dict(self.wire.up)
+                max(kept_ranks, key=kept_ranks.get), density=density)
+            rec["up_bytes_by_rank"] = {
+                r: b for (r, d), b in self.wire.up.items() if d == density}
+            if density is not None:
+                rec["uplink_density"] = density
         if self.eval_fn and self.round % self.scfg.eval_every == 0:
             rec.update(self.eval_fn(self.frozen, self.global_train))
         self.history.append(rec)

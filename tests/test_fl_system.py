@@ -157,6 +157,65 @@ def test_elastic_restore_cross_mesh_shardings(tmp_path):
         assert leaf.sharding == expect_sh[name], (name, leaf.sharding)
 
 
+# ---------------------------------------------------------------------------
+# EF x straggler policy (regression: dropped uplinks must not advance
+# the sender's residual as if they were delivered)
+# ---------------------------------------------------------------------------
+
+def test_ef_fold_dropped_recovers_lost_mass():
+    """REGRESSION (unit): when an uplink is discarded, folding its
+    reconstruction back into the residual makes the NEXT uplink carry
+    the lost update — unbiased-in-time survives the straggler policy."""
+    from repro.core import aggregation, messages
+    from repro.core.quant import QuantConfig
+    qcfg = QuantConfig(bits=8)
+    x1 = {"w": jax.random.normal(jax.random.PRNGKey(0), (8, 16))}
+    x2 = {"w": jax.random.normal(jax.random.PRNGKey(1), (8, 16))}
+    msg1, res1 = aggregation.ef_encode_packed(
+        x1, aggregation.ef_init(x1), qcfg)
+    # res1 assumes delivery: it only holds the small quantization error
+    assert float(jnp.max(jnp.abs(res1["w"]))) < 0.1
+    # msg1 is DISCARDED -> fold the whole reconstruction back
+    res1 = aggregation.ef_fold_dropped(res1, msg1)
+    np.testing.assert_allclose(np.asarray(res1["w"]), np.asarray(x1["w"]),
+                               atol=1e-5)
+    msg2, _ = aggregation.ef_encode_packed(x2, res1, qcfg)
+    recon2 = messages.unpack_message(msg2)["w"]
+    # the second uplink re-ships the lost mass (up to one quant step)
+    np.testing.assert_allclose(np.asarray(recon2),
+                               np.asarray(x1["w"] + x2["w"]), atol=0.05)
+
+
+def test_ef_residuals_commit_only_for_kept_clients():
+    """REGRESSION (system): run_round used to store_residual for every
+    survivor BEFORE the first-K straggler cut, so a dropped client's
+    residual claimed its update was delivered. Post-fix the straggled
+    client's residual holds its FULL update (folded message), which
+    dwarfs the kept client's quantization-error-sized residual."""
+    from repro.core.aggregation import ErrorFeedbackFedAvg
+    data = _setup(n=100, n_clients=2)
+    cfg = ResNetConfig(arch="resnet8", lora=LoRAConfig(rank=4, alpha=64.0))
+    model = rinit(jax.random.PRNGKey(0), cfg)
+    srv = FLServer(
+        model, lambda f, t, b: loss_fn(f, t, cfg, b), data,
+        ServerConfig(rounds=1, n_clients=2, clients_per_round=1,
+                     oversample=2.0),           # both dispatched, 1 kept
+        ClientConfig(local_epochs=1, batch_size=16, lr=0.05),
+        FLoCoRAConfig(rank=4, alpha=64.0, quant_bits=8,
+                      error_feedback=True))
+    assert isinstance(srv.aggregator, ErrorFeedbackFedAvg)
+    hist = srv.run(1)
+    assert hist[0]["n_agg"] == 1 and hist[0]["n_straggled"] == 1
+    norms = {}
+    for cid, res in srv.aggregator.residuals.items():
+        norms[cid] = float(np.sqrt(sum(
+            float(jnp.sum(jnp.square(l))) for l in jax.tree.leaves(res))))
+    assert len(norms) == 2
+    hi, lo = max(norms.values()), min(norms.values())
+    # pre-fix both residuals are quant-error-sized (ratio ~ 1)
+    assert hi > 10 * lo, norms
+
+
 def test_fl_tcc_accounting_matches_codec():
     data = _setup(n=100, n_clients=4)
     srv = _server(data)

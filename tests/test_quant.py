@@ -88,6 +88,36 @@ def test_symmetric_mode():
     assert float(jnp.max(jnp.abs(x - xd))) < 0.1
 
 
+@pytest.mark.parametrize("bits", [2, 4, 8])
+def test_symmetric_extremes_representable(bits):
+    """REGRESSION (symmetric saturation): scale = 2*amax/qmax with
+    zp=(qmax+1)//2 mapped +amax to level qmax+1 — the peak clipped and
+    dequantized short by ~amax/qmax while -amax overshot. The fixed
+    restricted-range grid represents BOTH extremes (and 0) exactly, so
+    the symmetric path is no worse than the asymmetric path at the
+    extremes."""
+    amax = 1.0
+    x = jnp.asarray([[-amax, -0.37, 0.0, 0.42, amax] * 8])
+    cfg_s = QuantConfig(bits=bits, channel_axis=0, symmetric=True)
+    cfg_a = QuantConfig(bits=bits, channel_axis=0, symmetric=False)
+    dq_s = np.asarray(quant.quant_dequant(x, cfg_s))
+    dq_a = np.asarray(quant.quant_dequant(x, cfg_a))
+    # ±amax round-trip exactly (pre-fix: error ~ amax/qmax at both ends)
+    assert abs(dq_s[0, 0] + amax) < 1e-6, dq_s[0, :5]
+    assert abs(dq_s[0, 4] - amax) < 1e-6, dq_s[0, :5]
+    # 0 stays exactly representable (integer zero-point)
+    assert abs(dq_s[0, 2]) < 1e-6
+    # at the extremes the symmetric path is now <= the asymmetric one
+    ext = [0, 4]
+    err_s = np.abs(dq_s[0, ext] - np.asarray(x)[0, ext]).max()
+    err_a = np.abs(dq_a[0, ext] - np.asarray(x)[0, ext]).max()
+    assert err_s <= err_a + 1e-6
+    # no level ever lands outside the grid (the old peak clipped)
+    s, z = quant.affine_qparams(x, bits, channel_axis=0, symmetric=True)
+    q = np.asarray(jnp.round(x / s[:, None]) + z[:, None])
+    assert q.min() >= 0 and q.max() <= cfg_s.qmax
+
+
 if st is None:
     def test_property_quant_bound_and_monotonic():
         pytest.skip("hypothesis not installed")

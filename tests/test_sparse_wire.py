@@ -1,0 +1,567 @@
+"""Sparse-delta wire format (FLASC-style top-k over the packed codec).
+
+Tentpole acceptance contract:
+  * per-tensor magnitude top-k keeps the largest-|x| entries; density
+    1.0 is the byte-exact DENSE fallback (PackedLeaf path);
+  * measured sparse wire bytes (real serialized buffers, index AND
+    bitmap encodings) == the static ``sparse_leaf_wire_bytes``
+    accounting for fp and 2/4/8-bit survivors;
+  * a 4-bit, 10%-density uplink of the quickstart (ResNet-8 rank-32)
+    model measures < 0.15x the fp32 message;
+  * scatter-add aggregation (FedAvg + FedBuff, rank-bucketed included)
+    == the densified weighted-mean reference;
+  * error feedback absorbs the top-k-dropped mass, and a sparse+EF run
+    at density=1.0 matches the dense-EF reference exactly;
+  * codec degenerate cases (constant channels, negative-only channels,
+    ``per_stack`` stacked tensors, sparse leaves) round-trip BIT-EXACTLY
+    through pack_message -> to_wire -> from_wire -> unpack_message.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:         # optional dep: property tests skip, rest runs
+    given = settings = st = None
+
+from repro.core import aggregation, flocora, lora, messages, sparse
+from repro.core.aggregation import ErrorFeedbackFedAvg, FedAvgAggregator, \
+    FedBuffAggregator
+from repro.core.flocora import FLoCoRAConfig, RankSchedule
+from repro.core.lora import LoRAConfig
+from repro.core.quant import QuantConfig
+from repro.core.sparse import SparseLeaf, SparsityConfig
+from repro.fl import AsyncConfig, AsyncFLServer, ClientConfig, FLServer, \
+    FleetTrace, LognormalLatency, ServerConfig
+
+
+def _tree(key, scale=1.0):
+    ks = jax.random.split(key, 4)
+    return {"a": jax.random.normal(ks[0], (6, 8)) * scale,
+            "b": jax.random.normal(ks[1], (4, 3, 5)) * scale,
+            "odd": jax.random.normal(ks[2], (7, 3)) * scale,
+            "norm": jax.random.normal(ks[3], (7,)) * scale}
+
+
+# ---------------------------------------------------------------------------
+# SparsityConfig
+# ---------------------------------------------------------------------------
+
+def test_sparsity_config_validation_and_annealing():
+    with pytest.raises(ValueError):
+        SparsityConfig(density=0.0)
+    with pytest.raises(ValueError):
+        SparsityConfig(density=1.5)
+    with pytest.raises(ValueError):
+        SparsityConfig(anneal_every=-1)
+    with pytest.raises(ValueError):
+        SparsityConfig(anneal_factor=0.0)
+    assert not SparsityConfig(density=1.0).enabled
+    assert SparsityConfig(density=0.5).enabled
+    assert SparsityConfig(density=1.0, anneal_every=2).enabled
+    s = SparsityConfig(density=0.4, anneal_every=2, anneal_factor=0.5,
+                       min_density=0.05, require_ef=False)
+    assert s.density_at(0) == 0.4
+    assert s.density_at(1) == 0.4
+    assert s.density_at(2) == pytest.approx(0.2)
+    assert s.density_at(4) == pytest.approx(0.1)
+    assert s.density_at(40) == pytest.approx(0.05)    # floored
+    # the floor binds annealed shrinkage only: a base density below
+    # min_density is honored as-is (mirrors RankSchedule.rank_for)
+    lo = SparsityConfig(density=0.005, anneal_every=5, require_ef=False)
+    assert lo.density_at(0) == 0.005
+
+
+def test_sparsity_requires_ef_at_config_time():
+    """FLASC keeps accuracy only with EF: require_ef=True (the default)
+    refuses a config without error feedback."""
+    with pytest.raises(ValueError, match="require_ef"):
+        FLoCoRAConfig(quant_bits=4, sparsity=SparsityConfig(density=0.1))
+    # explicit opt-out runs sparse without EF
+    cfg = FLoCoRAConfig(quant_bits=4,
+                        sparsity=SparsityConfig(density=0.1,
+                                                require_ef=False))
+    assert cfg.uplink_density(0) == 0.1
+    # density=1.0 never sparsifies, so EF is not forced
+    cfg1 = FLoCoRAConfig(quant_bits=4, sparsity=SparsityConfig())
+    assert cfg1.uplink_density(0) is None
+
+
+# ---------------------------------------------------------------------------
+# top-k selection + the dense fallback
+# ---------------------------------------------------------------------------
+
+def test_topk_keeps_largest_magnitude():
+    x = jnp.asarray([[0.1, -5.0, 0.2, 3.0], [0.0, -0.3, 4.0, 0.05]])
+    leaf = sparse.sparsify_leaf(x, density=3 / 8, bits=None)
+    assert leaf.k == 3
+    dense = np.asarray(leaf.densify())
+    ref = np.zeros((2, 4), np.float32)
+    ref[0, 1], ref[0, 3], ref[1, 2] = -5.0, 3.0, 4.0   # top-3 by |x|
+    np.testing.assert_array_equal(dense, ref)
+    # ascending flat indices (bitmap-compatible order)
+    idx = np.asarray(leaf.idx)
+    assert (np.diff(idx) > 0).all()
+
+
+def test_density_one_is_byte_exact_dense_fallback():
+    t = _tree(jax.random.PRNGKey(0))
+    cfg = QuantConfig(bits=4)
+    dense = messages.pack_message(t, cfg)
+    via_sparse = messages.pack_message(t, cfg, density=1.0)
+    for k in ("a", "b", "odd"):
+        assert messages.is_packed_leaf(via_sparse[k])
+        np.testing.assert_array_equal(np.asarray(dense[k].payload),
+                                      np.asarray(via_sparse[k].payload))
+    assert messages.message_wire_bytes(t, cfg, 1.0) == \
+        messages.message_wire_bytes(t, cfg)
+
+
+def test_keep_count_floor():
+    assert sparse.keep_count(1000, 0.1) == 100
+    assert sparse.keep_count(3, 0.01) == 1          # never zero survivors
+    assert sparse.keep_count(7, 1.0) == 7
+
+
+# ---------------------------------------------------------------------------
+# wire bytes: measured == static, index/bitmap crossover
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("bits", [None, 2, 4, 8])
+@pytest.mark.parametrize("density", [0.02, 0.1, 0.5])
+def test_sparse_wire_bytes_match_static(bits, density):
+    t = _tree(jax.random.PRNGKey(2))
+    cfg = QuantConfig(bits=bits)
+    msg = messages.pack_message(t, cfg, density=density)
+    assert messages.packed_wire_bytes(msg) == \
+        messages.message_wire_bytes(t, cfg, density)
+    # per-leaf measured == per-leaf static
+    for k in ("a", "b", "odd"):
+        leaf = msg[k]
+        assert isinstance(leaf, SparseLeaf)
+        assert leaf.wire_bytes() == sparse.sparse_leaf_wire_bytes(
+            leaf.shape, bits, density)
+    # 1-D leaves travel dense fp
+    assert not isinstance(msg["norm"], SparseLeaf)
+
+
+def test_index_bitmap_crossover():
+    """The serializer picks uint32 indices below ~1/32 density and the
+    n-bit bitmap above, matching the min() in the static accounting."""
+    x = jax.random.normal(jax.random.PRNGKey(0), (64, 64))   # n = 4096
+    lo = sparse.sparsify_leaf(x, 0.01, 4)     # 4k=164 < n/8=512 -> idx
+    hi = sparse.sparsify_leaf(x, 0.5, 4)      # 4k=8192 > 512 -> bitmap
+    assert "idx" in lo.to_wire() and "bitmap" not in lo.to_wire()
+    assert "bitmap" in hi.to_wire() and "idx" not in hi.to_wire()
+    for leaf in (lo, hi):
+        assert leaf.wire_bytes() == sparse.sparse_leaf_wire_bytes(
+            leaf.shape, 4, leaf.density)
+
+
+def test_quickstart_model_4bit_10pct_under_15pct_of_fp32():
+    """ACCEPTANCE: measured packed_wire_bytes of a 4-bit, 10%-density
+    uplink < 0.15x the fp32 message for the quickstart model."""
+    from repro.models.resnet import ResNetConfig, init as rinit
+    cfg = ResNetConfig(arch="resnet8",
+                       lora=LoRAConfig(rank=32, alpha=512.0))
+    train = rinit(jax.random.PRNGKey(0), cfg)["train"]
+    fp = messages.message_wire_bytes(train, QuantConfig())
+    msg = messages.pack_message(train, QuantConfig(bits=4), density=0.1)
+    meas = messages.packed_wire_bytes(msg)
+    assert meas == messages.message_wire_bytes(train, QuantConfig(bits=4),
+                                               0.1)
+    assert meas < 0.15 * fp, (meas, fp)
+
+
+# ---------------------------------------------------------------------------
+# serialization round-trips (incl. the degenerate codec cases)
+# ---------------------------------------------------------------------------
+
+def _assert_wire_roundtrip_bit_exact(t, cfg, density=None):
+    """pack -> to_wire -> from_wire -> unpack must reproduce the direct
+    unpack BIT-exactly, and measured bytes must match the accounting."""
+    msg = messages.pack_message(t, cfg, density=density)
+    wire = messages.message_to_wire(msg)
+    back = messages.message_from_wire(wire, msg)
+    direct = messages.unpack_message(msg)
+    rebuilt = messages.unpack_message(back)
+    for a, b in zip(jax.tree.leaves(direct), jax.tree.leaves(rebuilt)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+    assert messages.packed_wire_bytes(msg) == \
+        messages.message_wire_bytes(t, cfg, density)
+
+
+@pytest.mark.parametrize("bits", [2, 4, 8])
+@pytest.mark.parametrize("density", [None, 0.25])
+def test_codec_degenerate_constant_and_negative_channels(bits, density):
+    t = {"const": jnp.full((4, 32), 1.7),
+         "zeros": jnp.zeros((3, 16)),
+         "neg": -jnp.abs(jax.random.normal(jax.random.PRNGKey(0),
+                                           (5, 24))) - 0.5,
+         "norm": jnp.linspace(-1.0, 1.0, 9)}
+    _assert_wire_roundtrip_bit_exact(t, QuantConfig(bits=bits), density)
+
+
+@pytest.mark.parametrize("density", [None, 0.2])
+def test_codec_degenerate_per_stack(density):
+    t = {"stacked": jax.random.normal(jax.random.PRNGKey(3), (3, 4, 6)),
+         "deep": jax.random.normal(jax.random.PRNGKey(4), (2, 2, 5, 7))}
+    _assert_wire_roundtrip_bit_exact(t, QuantConfig(bits=4, per_stack=True),
+                                     density)
+
+
+def test_codec_sparse_fp_survivors_roundtrip():
+    """Sparse without quantization: fp32 survivors + indices."""
+    t = _tree(jax.random.PRNGKey(5))
+    _assert_wire_roundtrip_bit_exact(t, QuantConfig(), 0.15)
+    msg = messages.pack_message(t, QuantConfig(), density=0.15)
+    # fp survivors reconstruct EXACTLY at the kept positions
+    dense = np.asarray(messages.unpack_message(msg)["a"])
+    orig = np.asarray(t["a"])
+    kept = np.flatnonzero(dense.ravel())
+    np.testing.assert_array_equal(dense.ravel()[kept],
+                                  orig.ravel()[kept])
+
+
+def test_sparse_leaf_from_wire_rebuilds_payload_bit_exact():
+    x = jax.random.normal(jax.random.PRNGKey(6), (16, 48))
+    for density in (0.02, 0.4):            # index and bitmap encodings
+        leaf = sparse.sparsify_leaf(x, density, 4)
+        back = SparseLeaf.from_wire(leaf.to_wire(), leaf.shape,
+                                    leaf.dtype, leaf.bits, density)
+        np.testing.assert_array_equal(np.asarray(back.idx),
+                                      np.asarray(leaf.idx))
+        np.testing.assert_array_equal(np.asarray(back.payload),
+                                      np.asarray(leaf.payload))
+
+
+def test_wire_header_v3_carries_density():
+    t = _tree(jax.random.PRNGKey(7))
+    msg = messages.pack_message(t, QuantConfig(bits=4), density=0.1)
+    name, bufs = messages.message_to_wire(msg)[0]
+    assert name == messages.HEADER_KEY
+    assert bufs["header"].nbytes == messages.HEADER_BYTES == 20
+    hdr = messages.parse_wire_header(bufs["header"])
+    assert hdr["version"] == 3 and hdr["bits"] == 4
+    assert hdr["density"] == pytest.approx(0.1)
+    # dense message advertises density 1.0
+    dense_hdr = messages.parse_wire_header(messages.message_to_wire(
+        messages.pack_message(t, QuantConfig(bits=4)))[0][1]["header"])
+    assert dense_hdr["density"] == 1.0
+    # a 16-byte v2 header (no density word) still parses
+    v2 = np.asarray([messages.WIRE_MAGIC, 2, 8, 4], np.uint32)
+    got = messages.parse_wire_header(v2)
+    assert got == {"version": 2, "rank": 8, "bits": 4, "density": 1.0}
+
+
+if st is not None:
+    @settings(max_examples=40, deadline=None)
+    @given(bits=st.sampled_from([None, 2, 4, 8]),
+           rows=st.integers(2, 12), cols=st.integers(2, 40),
+           density=st.floats(0.01, 1.0), seed=st.integers(0, 2**31 - 1))
+    def test_property_sparse_accounting_and_roundtrip(bits, rows, cols,
+                                                      density, seed):
+        """Property: for any shape/density/bits, measured wire bytes ==
+        static accounting and serialization round-trips bit-exactly."""
+        rng = np.random.default_rng(seed)
+        t = {"w": jnp.asarray(rng.normal(size=(rows, cols)), jnp.float32)}
+        _assert_wire_roundtrip_bit_exact(t, QuantConfig(bits=bits),
+                                         density)
+else:
+    def test_property_sparse_accounting_and_roundtrip():
+        pytest.skip("hypothesis not installed")
+
+
+# ---------------------------------------------------------------------------
+# scatter-add aggregation
+# ---------------------------------------------------------------------------
+
+def test_scatter_add_fedavg_matches_densified_reference():
+    qcfg = QuantConfig(bits=4)
+    trees = [_tree(jax.random.PRNGKey(i)) for i in range(5)]
+    w = jnp.asarray([1.0, 2.0, 3.0, 1.5, 0.5])
+    msgs = [messages.pack_message(t, qcfg, density=0.2) for t in trees]
+    got = FedAvgAggregator(qcfg).aggregate(msgs, w)
+    wn = np.asarray(w) / float(np.sum(np.asarray(w)))
+    for k in trees[0]:
+        ref = sum(wn[i] * np.asarray(messages.unpack_message(msgs[i])[k])
+                  for i in range(5))
+        np.testing.assert_allclose(np.asarray(got[k]), ref,
+                                   rtol=1e-5, atol=1e-5)
+
+
+def test_scatter_add_mixed_rank_buckets():
+    """Sparse uplinks at mixed adapter ranks route through the
+    rank-bucketed path and zero-pad like the dense packed wire."""
+    def pair_tree(seed, rank):
+        k = jax.random.PRNGKey(seed)
+        ad = lora.dense_lora_init(k, 16, 12,
+                                  LoRAConfig(rank=rank, alpha=16.0 * rank))
+        b = jax.random.normal(jax.random.fold_in(k, 1), ad["b"].shape)
+        return {"lin": {"a": ad["a"], "b": b * 0.1}}
+
+    qcfg = QuantConfig(bits=8)
+    ranks = (4, 8, 8, 16)
+    trees = [pair_tree(i, r) for i, r in enumerate(ranks)]
+    w = jnp.asarray([1.0, 2.0, 1.0, 0.5])
+    msgs = [messages.pack_message(t, qcfg, density=0.25) for t in trees]
+    assert lora.tree_max_rank(msgs[0]) == 4     # shape-only detection
+    got = FedAvgAggregator(qcfg, r_target=16).aggregate(msgs, w)
+    assert lora.tree_ranks(got) == (16,)
+    padded = [lora.resize_tree_rank(messages.unpack_message(m), 16)
+              for m in msgs]
+    ref = aggregation.fedavg(aggregation.stack_trees(padded), w)
+    for a, b in zip(jax.tree.leaves(got), jax.tree.leaves(ref)):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                                   rtol=1e-5, atol=1e-5)
+
+
+def test_scatter_add_mixed_density_buffer():
+    """A FedBuff buffer spanning a density-annealing boundary mixes
+    dense-packed and sparse leaves at the same position; the scatter
+    branch must aggregate both against the densified reference."""
+    qcfg = QuantConfig(bits=8)
+    trees = [_tree(jax.random.PRNGKey(i)) for i in range(3)]
+    w = jnp.asarray([1.0, 2.0, 1.5])
+    msgs = [messages.pack_message(trees[0], qcfg),             # dense
+            messages.pack_message(trees[1], qcfg, density=0.3),
+            messages.pack_message(trees[2], qcfg, density=0.1)]
+    got = aggregation.fedavg_packed(msgs, w)
+    wn = np.asarray(w) / float(np.sum(np.asarray(w)))
+    for k in trees[0]:
+        ref = sum(wn[i] * np.asarray(messages.unpack_message(msgs[i])[k])
+                  for i in range(3))
+        np.testing.assert_allclose(np.asarray(got[k]), ref,
+                                   rtol=1e-5, atol=1e-5)
+
+
+def test_fedbuff_mixed_fp_and_sparse_buffer_order_safe():
+    """Quant off + density annealing crossing 1.0: the buffer holds a
+    RAW fp tree and sparse messages. Flushing must not depend on which
+    arrived first (routing keys off ANY wire-form message)."""
+    qcfg = QuantConfig()
+    trees = [_tree(jax.random.PRNGKey(i)) for i in range(3)]
+    fp_msg = trees[0]                                     # density 1.0
+    sp_msgs = [messages.pack_message(t, qcfg, density=0.3)
+               for t in trees[1:]]
+    for order in ([fp_msg] + sp_msgs, sp_msgs + [fp_msg]):
+        agg = FedBuffAggregator(half_life=4.0)
+        for m in order:
+            agg.add(m, n_k=1.0, staleness=0.0)
+        got = agg.flush()
+        for k in trees[0]:
+            ref = (np.asarray(fp_msg[k], np.float32) + sum(
+                np.asarray(messages.unpack_message(m)[k], np.float32)
+                for m in sp_msgs)) / 3.0
+            np.testing.assert_allclose(np.asarray(got[k]), ref,
+                                       rtol=1e-5, atol=1e-5)
+
+
+def test_rank_for_floor_binds_anneal_only():
+    """REGRESSION (review): with annealing on, a configured base rank
+    BELOW min_rank must stay honored as-is — the floor is
+    min(min_rank, base), never a raise above the validated base."""
+    s = RankSchedule(client_ranks=(1, 8), anneal_every=4, min_rank=2)
+    assert s.rank_for(0, 0) == 1
+    assert s.rank_for(0, 100) == 1
+    assert s.rank_for(1, 0) == 8
+    assert s.rank_for(1, 8) == 2          # 8 * 0.5^2, floored at 2
+    assert s.rank_for(1, 100) == 2
+
+
+def test_fedbuff_sparse_add_flush():
+    qcfg = QuantConfig(bits=4)
+    trees = [_tree(jax.random.PRNGKey(i)) for i in range(3)]
+    msgs = [messages.pack_message(t, qcfg, density=0.3) for t in trees]
+    agg = FedBuffAggregator(half_life=4.0)
+    for i, m in enumerate(msgs):
+        agg.add(m, n_k=10.0, staleness=float(i))
+    got = agg.flush()
+    wts = np.asarray([10.0 * 2.0 ** (-i / 4.0) for i in range(3)])
+    wn = wts / wts.sum()
+    for k in trees[0]:
+        ref = sum(wn[i] * np.asarray(messages.unpack_message(msgs[i])[k])
+                  for i in range(3))
+        np.testing.assert_allclose(np.asarray(got[k]), ref,
+                                   rtol=1e-5, atol=1e-5)
+    assert not agg.pending
+
+
+# ---------------------------------------------------------------------------
+# error feedback over the sparse wire
+# ---------------------------------------------------------------------------
+
+def test_ef_sparse_residual_absorbs_dropped_mass():
+    """e' = (x+e) - deq(msg): zero reconstruction at dropped positions
+    means the residual carries the FULL dropped values."""
+    qcfg = QuantConfig(bits=8)
+    x = {"w": jax.random.normal(jax.random.PRNGKey(0), (8, 16))}
+    res0 = aggregation.ef_init(x)
+    msg, res = aggregation.ef_encode_packed(x, res0, qcfg, density=0.25)
+    recon = np.asarray(messages.unpack_message(msg)["w"])
+    np.testing.assert_allclose(np.asarray(res["w"]),
+                               np.asarray(x["w"]) - recon, atol=1e-6)
+    dropped = recon.ravel() == 0.0
+    np.testing.assert_allclose(np.asarray(res["w"]).ravel()[dropped],
+                               np.asarray(x["w"]).ravel()[dropped],
+                               atol=1e-6)
+
+
+def test_ef_sparse_uplink_unbiased_in_time():
+    """Time-averaged sparse+EF reconstruction converges to x (every
+    position eventually ships), unlike EF-free top-k which never sends
+    the small entries."""
+    cfg = FLoCoRAConfig(quant_bits=8, error_feedback=True,
+                        sparsity=SparsityConfig(density=0.25))
+    x = {"w": jax.random.normal(jax.random.PRNGKey(0), (6, 16)) * 0.7}
+    res, acc = None, jnp.zeros_like(x["w"])
+    n = 16
+    for _ in range(n):
+        msg, res = flocora.client_uplink(x, cfg, res)
+        acc = acc + messages.unpack_message(msg)["w"]
+    bias_ef = float(jnp.mean(jnp.abs(acc / n - x["w"])))
+    no_ef = messages.unpack_message(
+        messages.pack_message(x, cfg.qcfg, density=0.25))["w"]
+    bias_topk = float(jnp.mean(jnp.abs(no_ef - x["w"])))
+    assert bias_ef < 0.5 * bias_topk, (bias_ef, bias_topk)
+
+
+# ---------------------------------------------------------------------------
+# FL engine end-to-end
+# ---------------------------------------------------------------------------
+
+def _tiny_setup(n=96, n_clients=4, seed=0):
+    rng = np.random.default_rng(seed)
+    w_true = rng.normal(size=(16, 10)).astype(np.float32)
+    x = rng.normal(size=(n, 16)).astype(np.float32)
+    y = np.argmax(x @ w_true + 0.1 * rng.normal(size=(n, 10)), axis=1)
+    parts = np.array_split(rng.permutation(n), n_clients)
+    data = [{"x": x[p], "y": y[p].astype(np.int32)} for p in parts]
+    model = {"frozen": {"mu": jnp.zeros((16,))},
+             "train": {"w": jnp.asarray(0.01 * rng.normal(size=(16, 10)),
+                                        jnp.float32),
+                       "b": jnp.zeros((10,), jnp.float32)}}
+    return data, model
+
+
+def _tiny_loss(frozen, train, batch):
+    logits = (batch["x"] - frozen["mu"]) @ train["w"] + train["b"]
+    logp = jax.nn.log_softmax(logits)
+    loss = -jnp.mean(jnp.take_along_axis(logp, batch["y"][:, None],
+                                         axis=1))
+    return loss, {}
+
+
+def _tiny_server(data, model, fcfg, rounds=3):
+    return FLServer(
+        model, _tiny_loss, data,
+        ServerConfig(rounds=rounds, n_clients=len(data),
+                     clients_per_round=2),
+        ClientConfig(local_epochs=1, batch_size=8, lr=0.1), fcfg)
+
+
+def test_server_sparse_round_accounting():
+    """Sparse uplinks: measured up_bytes == static sparse accounting,
+    downlinks stay dense, density lands in the history record."""
+    data, model = _tiny_setup()
+    fcfg = FLoCoRAConfig(rank=8, alpha=128.0, quant_bits=4,
+                         error_feedback=True,
+                         sparsity=SparsityConfig(density=0.2))
+    srv = _tiny_server(data, model, fcfg)
+    hist = srv.run(3)
+    expect_up = messages.message_wire_bytes(model["train"], fcfg.qcfg, 0.2)
+    expect_down = messages.message_wire_bytes(model["train"], fcfg.qcfg)
+    for h in hist:
+        assert h["up_bytes_measured"] == expect_up
+        assert h["uplink_density"] == 0.2
+        assert h["up_bytes"] == 2 * expect_up       # 2 kept clients
+        assert h["down_bytes"] == 2 * expect_down
+    assert np.isfinite(hist[-1]["client_loss"])
+    assert expect_up < expect_down
+
+
+def test_server_density_annealing_changes_uplink_bytes():
+    data, model = _tiny_setup()
+    fcfg = FLoCoRAConfig(rank=8, alpha=128.0, quant_bits=8,
+                         error_feedback=True,
+                         sparsity=SparsityConfig(density=0.8,
+                                                 anneal_every=2,
+                                                 anneal_factor=0.25))
+    srv = _tiny_server(data, model, fcfg, rounds=4)
+    hist = srv.run(4)
+    assert hist[0]["uplink_density"] == 0.8
+    assert hist[2]["uplink_density"] == pytest.approx(0.2)
+    assert hist[2]["up_bytes_measured"] < hist[0]["up_bytes_measured"]
+
+
+def test_sparse_ef_density_one_matches_dense_ef_run():
+    """ACCEPTANCE (exact-parity fallback): a sparse+EF run at
+    density=1.0 aggregates IDENTICALLY to the dense-EF reference."""
+    data, model = _tiny_setup()
+    dense = _tiny_server(data, model,
+                         FLoCoRAConfig(rank=8, alpha=128.0, quant_bits=4,
+                                       error_feedback=True))
+    sparse1 = _tiny_server(data, model,
+                           FLoCoRAConfig(rank=8, alpha=128.0, quant_bits=4,
+                                         error_feedback=True,
+                                         sparsity=SparsityConfig(
+                                             density=1.0)))
+    dense.run(3)
+    sparse1.run(3)
+    for a, b in zip(jax.tree.leaves(jax.device_get(dense.global_train)),
+                    jax.tree.leaves(jax.device_get(sparse1.global_train))):
+        np.testing.assert_allclose(a, b, rtol=1e-6, atol=1e-7)
+
+
+def test_async_engine_sparse_uplinks():
+    """The async engine ships sparse uplinks (require_ef=False) and
+    accounts the measured sparse bytes."""
+    rng = np.random.default_rng(0)
+    data, model = _tiny_setup(n=120, n_clients=6)
+    fcfg = FLoCoRAConfig(rank=8, alpha=128.0, quant_bits=8,
+                         sparsity=SparsityConfig(density=0.2,
+                                                 require_ef=False))
+    trace = FleetTrace(seed=0, latency=LognormalLatency(
+        compute_median_s=10.0, network_mbps=20.0))
+    srv = AsyncFLServer(model, _tiny_loss, data,
+                        AsyncConfig(total_arrivals=8, concurrency=3,
+                                    buffer_size=4, seed=0),
+                        ClientConfig(local_epochs=1, batch_size=8, lr=0.1),
+                        fcfg, trace=trace)
+    hist = srv.run()
+    assert hist and np.isfinite(hist[-1]["client_loss"])
+    up_one = messages.message_wire_bytes(model["train"], fcfg.qcfg, 0.2)
+    down_one = messages.message_wire_bytes(model["train"], fcfg.qcfg)
+    assert hist[-1]["up_bytes"] == srv.n_arrived * up_one
+    assert hist[-1]["down_bytes"] == srv.n_dispatched * down_one
+
+
+@pytest.mark.slow
+def test_sparse_smoke_resnet_system():
+    """SPARSE SMOKE (CI job): ResNet-8 fleet over the 4-bit 10%-density
+    wire with EF — short rounds, interpret-mode kernels."""
+    from repro.data import SyntheticVision, lda_partition
+    from repro.models.resnet import ResNetConfig, init as rinit, loss_fn
+    rng = np.random.default_rng(0)
+    sv = SyntheticVision(seed=0)
+    y = rng.integers(0, 10, 200)
+    x = sv.sample(rng, y).astype(np.float32)
+    parts = lda_partition(y, 4, alpha=0.5, seed=0)
+    data = [{"x": x[p], "y": y[p].astype(np.int32)} for p in parts]
+    cfg = ResNetConfig(arch="resnet8", lora=LoRAConfig(rank=8,
+                                                       alpha=128.0))
+    model = rinit(jax.random.PRNGKey(0), cfg)
+    fcfg = FLoCoRAConfig(rank=8, alpha=128.0, quant_bits=4,
+                         error_feedback=True,
+                         sparsity=SparsityConfig(density=0.1))
+    srv = FLServer(model, lambda f, t, b: loss_fn(f, t, cfg, b), data,
+                   ServerConfig(rounds=2, n_clients=4,
+                                clients_per_round=2),
+                   ClientConfig(local_epochs=1, batch_size=16, lr=0.05),
+                   fcfg)
+    hist = srv.run(2)
+    assert np.isfinite(hist[-1]["client_loss"])
+    fp = messages.message_wire_bytes(model["train"], QuantConfig())
+    assert hist[-1]["up_bytes_measured"] < 0.15 * fp
