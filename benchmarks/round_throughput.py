@@ -33,14 +33,24 @@ uplink bytes for fp32 vs 2/4/8-bit dense vs 4-bit x density in
 accounting), plus steady-state aggregate timing of the scatter-add
 sparse path vs the fused dense packed path over a K-client cohort.
 
+``--flat`` sweeps the FLAT-TREE codec (core/flat.py) against the
+per-leaf oracle: pack / serialize / aggregate wall time and compiled-
+program counts at K in {4, 8, 16} — byte totals cross-checked identical
+between the two codecs at every step.
+
+``--json PATH`` additionally writes every sweep row as machine-readable
+JSON ({"sweep", "args", "rows": [{"name", "time_us", ...metrics}]}), so
+perf trajectories can be tracked across PRs (BENCH_5.json onward).
+
     PYTHONPATH=src python -m benchmarks.round_throughput \
-        [--clients 8] [--samples 64] [--iters 3] \
+        [--clients 8] [--samples 64] [--iters 3] [--json PATH] \
         [--rank-profile 4,8,16,32] | [--async [--arrivals 12]] | \
-        [--sparse]
+        [--sparse] | [--flat]
 """
 from __future__ import annotations
 
 import argparse
+import json
 import time
 
 import jax
@@ -55,6 +65,30 @@ from repro.fl.client import ClientConfig, make_cohort_trainer, \
     make_local_trainer, stack_cohort_batches, stack_local_batches, \
     cohort_steps, pad_cohort_batches, pow2_pad
 from repro.models.resnet import ResNetConfig, init as rinit, loss_fn
+
+# compiled-program counter (the dispatch-count metric for --flat/--async)
+_COMPILES = [0]
+jax.monitoring.register_event_duration_secs_listener(
+    lambda e, d, **kw: _COMPILES.__setitem__(0, _COMPILES[0] + 1)
+    if e == "/jax/core/compile/backend_compile_duration" else None)
+
+
+def row(name: str, time_us: float = 0.0, **metrics) -> dict:
+    return {"name": name, "time_us": round(float(time_us), 1), **metrics}
+
+
+def _fmt_val(v) -> str:
+    if isinstance(v, bool):
+        return str(v)
+    if isinstance(v, float):
+        return f"{v:.2f}"
+    return str(v)
+
+
+def format_row(r: dict) -> str:
+    extras = " ".join(f"{k}={_fmt_val(v)}" for k, v in r.items()
+                      if k not in ("name", "time_us"))
+    return f"{r['name']},{r['time_us']:.0f},{extras}"
 
 
 def _time(fn, iters: int) -> float:
@@ -85,7 +119,7 @@ def _setup_fl(n_clients: int, samples_per_client: int, rank: int):
 
 
 def run(n_clients: int = 6, samples_per_client: int = 48,
-        iters: int = 2) -> list[str]:
+        iters: int = 2) -> list[dict]:
     rows = []
     rng, datas, model, ccfg, lfn = _setup_fl(n_clients,
                                              samples_per_client, rank=8)
@@ -114,31 +148,31 @@ def run(n_clients: int = 6, samples_per_client: int = 48,
 
     t_seq = _time(run_seq, iters)
     t_coh = _time(run_coh, iters)
-    rows.append(f"round/seq_loop_k{n_clients},{t_seq * 1e6:.0f},"
-                f"clients_per_sec={n_clients / t_seq:.2f}")
-    rows.append(f"round/vmap_cohort_k{n_clients},{t_coh * 1e6:.0f},"
-                f"clients_per_sec={n_clients / t_coh:.2f} "
-                f"speedup={t_seq / t_coh:.2f}x")
+    rows.append(row(f"round/seq_loop_k{n_clients}", t_seq * 1e6,
+                    clients_per_sec=n_clients / t_seq))
+    rows.append(row(f"round/vmap_cohort_k{n_clients}", t_coh * 1e6,
+                    clients_per_sec=n_clients / t_coh,
+                    speedup=t_seq / t_coh))
 
     # real bytes-on-wire per uplink message
     fp_bytes = messages.message_wire_bytes(
         train0, FLoCoRAConfig(rank=8, alpha=128.0).qcfg)
-    rows.append(f"round/wire_fp32,0,bytes={fp_bytes}")
+    rows.append(row("round/wire_fp32", bytes=fp_bytes))
     for bits in (8, 4, 2):
         fcfg = FLoCoRAConfig(rank=8, alpha=128.0, quant_bits=bits)
         msg, _ = flocora.client_uplink(train0, fcfg)
         measured = messages.packed_wire_bytes(msg)
         static = messages.message_wire_bytes(train0, fcfg.qcfg)
         assert measured == static, (measured, static)
-        rows.append(f"round/wire_int{bits},0,bytes={measured} "
-                    f"compression={fp_bytes / measured:.2f}x "
-                    f"matches_static={measured == static}")
+        rows.append(row(f"round/wire_int{bits}", bytes=measured,
+                        compression=fp_bytes / measured,
+                        matches_static=measured == static))
     return rows
 
 
 def run_rank_profile(profile: tuple[int, ...], n_clients: int = 6,
                      samples_per_client: int = 48,
-                     iters: int = 2) -> list[str]:
+                     iters: int = 2) -> list[dict]:
     """Rank-bucketed engine sweep: mixed-rank cohort clients/sec vs the
     everyone-at-max-rank baseline, plus measured per-tier wire bytes."""
     rows = []
@@ -176,12 +210,12 @@ def run_rank_profile(profile: tuple[int, ...], n_clients: int = 6,
     t_b = _time(run_bucketed, iters)
     t_u = _time(run_uniform_max, iters)
     tag = "x".join(str(r) for r in profile)
-    rows.append(f"round/bucketed_r{tag}_k{n_clients},{t_b * 1e6:.0f},"
-                f"clients_per_sec={n_clients / t_b:.2f} "
-                f"buckets={len(buckets)}")
-    rows.append(f"round/uniform_r{r_max}_k{n_clients},{t_u * 1e6:.0f},"
-                f"clients_per_sec={n_clients / t_u:.2f} "
-                f"vs_bucketed={t_u / t_b:.2f}x")
+    rows.append(row(f"round/bucketed_r{tag}_k{n_clients}", t_b * 1e6,
+                    clients_per_sec=n_clients / t_b,
+                    buckets=len(buckets)))
+    rows.append(row(f"round/uniform_r{r_max}_k{n_clients}", t_u * 1e6,
+                    clients_per_sec=n_clients / t_u,
+                    vs_bucketed=t_u / t_b))
 
     # measured wire bytes per tier (real packed buffers == static)
     fcfg = FLoCoRAConfig(rank=r_max, alpha=16.0 * r_max, quant_bits=8,
@@ -191,15 +225,15 @@ def run_rank_profile(profile: tuple[int, ...], n_clients: int = 6,
         measured = messages.packed_wire_bytes(msg)
         static = flocora.client_wire_bytes(train0, fcfg, r)
         assert measured == static, (measured, static)
-        rows.append(f"round/wire_rank{r},0,bytes={measured} "
-                    f"clients={len(buckets[r])}")
+        rows.append(row(f"round/wire_rank{r}", bytes=measured,
+                        clients=len(buckets[r])))
     fleet = flocora.fleet_tcc_bytes(train0, fcfg, 1)
-    rows.append(f"round/fleet_round_bytes,0,bytes={fleet}")
+    rows.append(row("round/fleet_round_bytes", bytes=fleet))
     return rows
 
 
 def run_async(n_clients: int = 8, samples_per_client: int = 48,
-              arrivals: int = 12) -> list[str]:
+              arrivals: int = 12) -> list[dict]:
     """Async FedBuff engine throughput + wall-clock-vs-bytes trajectory
     on a 2-tier (r in {4, 8}) fleet."""
     from repro.fl import AsyncConfig, AsyncFLServer, FleetTrace, \
@@ -232,22 +266,22 @@ def run_async(n_clients: int = 8, samples_per_client: int = 48,
         t0 = time.perf_counter()
         hist = srv.run()
         dt = time.perf_counter() - t0
-        rows.append(f"round/async_{name}_n{arrivals},{dt * 1e6:.0f},"
-                    f"arrivals_per_sec={arrivals / dt:.2f} "
-                    f"programs={len(srv.program_keys)} "
-                    f"versions={srv.version}")
+        rows.append(row(f"round/async_{name}_n{arrivals}", dt * 1e6,
+                        arrivals_per_sec=arrivals / dt,
+                        programs=len(srv.program_keys),
+                        versions=srv.version))
     # wall-clock-vs-bytes trajectory of the micro-batched run
     for h in hist:
-        rows.append(f"round/async_v{h['version']},0,"
-                    f"virtual_s={h['t_virtual']:.0f} "
-                    f"tcc_bytes={h['tcc_bytes']} "
-                    f"loss={h['client_loss']:.3f} "
-                    f"staleness_mean={h['staleness_mean']:.2f}")
+        rows.append(row(f"round/async_v{h['version']}",
+                        virtual_s=h["t_virtual"],
+                        tcc_bytes=h["tcc_bytes"],
+                        loss=h["client_loss"],
+                        staleness_mean=h["staleness_mean"]))
     return rows
 
 
 def run_sparse(n_clients: int = 6, samples_per_client: int = 48,
-               iters: int = 2) -> list[str]:
+               iters: int = 2) -> list[dict]:
     """Sparse-delta wire sweep: measured bytes across bits x density +
     scatter-add vs fused-dense aggregate timing."""
     from repro.core.quant import QuantConfig
@@ -258,20 +292,20 @@ def run_sparse(n_clients: int = 6, samples_per_client: int = 48,
     _, _, model, _, _ = _setup_fl(n_clients, samples_per_client, rank=8)
     train0 = model["train"]
     fp_bytes = messages.message_wire_bytes(train0, QuantConfig())
-    rows.append(f"sparse/wire_fp32,0,bytes={fp_bytes}")
+    rows.append(row("sparse/wire_fp32", bytes=fp_bytes))
     for bits in (8, 4, 2):
         dense = messages.message_wire_bytes(train0, QuantConfig(bits=bits))
-        rows.append(f"sparse/wire_int{bits}_dense,0,bytes={dense} "
-                    f"compression={fp_bytes / dense:.2f}x")
+        rows.append(row(f"sparse/wire_int{bits}_dense", bytes=dense,
+                        compression=fp_bytes / dense))
     for density in (0.25, 0.1, 0.05):
         cfg = QuantConfig(bits=4)
         msg = messages.pack_message(train0, cfg, density=density)
         measured = messages.packed_wire_bytes(msg)
         static = messages.message_wire_bytes(train0, cfg, density)
         assert measured == static, (measured, static)
-        rows.append(f"sparse/wire_int4_d{density},0,bytes={measured} "
-                    f"compression={fp_bytes / measured:.2f}x "
-                    f"matches_static={measured == static}")
+        rows.append(row(f"sparse/wire_int4_d{density}", bytes=measured,
+                        compression=fp_bytes / measured,
+                        matches_static=measured == static))
 
     # steady-state aggregation: K sparse scatter-add vs K fused dense
     qcfg = QuantConfig(bits=4)
@@ -288,19 +322,100 @@ def run_sparse(n_clients: int = 6, samples_per_client: int = 48,
         agg.aggregate(dense_msgs, w))[0], iters)
     t_sparse = _time(lambda: jax.tree.leaves(
         agg.aggregate(sparse_msgs, w))[0], iters)
-    rows.append(f"sparse/agg_dense_k{n_clients},{t_dense * 1e6:.0f},"
-                f"cohorts_per_sec={1 / t_dense:.2f}")
-    rows.append(f"sparse/agg_scatter_k{n_clients},{t_sparse * 1e6:.0f},"
-                f"cohorts_per_sec={1 / t_sparse:.2f} "
-                f"vs_dense={t_dense / t_sparse:.2f}x")
+    rows.append(row(f"sparse/agg_dense_k{n_clients}", t_dense * 1e6,
+                    cohorts_per_sec=1 / t_dense))
+    rows.append(row(f"sparse/agg_scatter_k{n_clients}", t_sparse * 1e6,
+                    cohorts_per_sec=1 / t_sparse,
+                    vs_dense=t_dense / t_sparse))
 
     # end-to-end round bytes of a sparse+EF config (accounting only)
     fcfg = FLoCoRAConfig(rank=8, alpha=128.0, quant_bits=4,
                          error_feedback=True,
                          sparsity=SparsityConfig(density=0.1))
     rb = flocora.round_wire_bytes(train0, fcfg)
-    rows.append(f"sparse/round_bytes_ef_d0.1,0,down={rb['down_bytes']} "
-                f"up={rb['up_bytes']} round={rb['round_bytes']}")
+    rows.append(row("sparse/round_bytes_ef_d0.1", down=rb["down_bytes"],
+                    up=rb["up_bytes"], round=rb["round_bytes"]))
+    return rows
+
+
+def run_flat(n_clients: int = 6, samples_per_client: int = 48,
+             iters: int = 3) -> list[dict]:
+    """Flat-tree codec sweep: pack/serialize/aggregate wall time and
+    compiled-program counts, per-leaf oracle vs flat, K in {4, 8, 16}.
+    Byte totals are asserted identical between the codecs throughout."""
+    from repro.core import aggregation
+    from repro.core.quant import QuantConfig
+
+    rows = []
+    _, _, model, _, _ = _setup_fl(n_clients, samples_per_client, rank=8)
+    train0 = model["train"]
+    qcfg = QuantConfig(bits=4)
+    k_max = 16
+    keys = jax.random.split(jax.random.PRNGKey(1), k_max)
+    trees = [jax.tree.map(
+        lambda x, k=k: x + 0.01 * jax.random.normal(k, x.shape), train0)
+        for k in keys]
+
+    def _block(x):
+        return jax.block_until_ready(jax.tree.leaves(
+            x, is_leaf=messages.is_wire_leaf)[0])
+
+    # cold pack: compiled programs per codec
+    n0 = _COMPILES[0]
+    msg_per = messages.pack_message(train0, qcfg)
+    _block(msg_per)
+    per_programs = _COMPILES[0] - n0
+    n0 = _COMPILES[0]
+    msg_flat = messages.pack_message(train0, qcfg, flat=True)
+    _block(msg_flat)
+    flat_programs = _COMPILES[0] - n0
+    assert messages.packed_wire_bytes(msg_flat) == \
+        messages.packed_wire_bytes(msg_per) == \
+        messages.message_wire_bytes(train0, qcfg)
+
+    # steady-state pack + serialize wall time
+    t_pack_per = _time(
+        lambda: _block(messages.pack_message(train0, qcfg)), iters)
+    t_pack_flat = _time(
+        lambda: _block(messages.pack_message(train0, qcfg, flat=True)),
+        iters)
+    rows.append(row("flat/pack_per_leaf", t_pack_per * 1e6,
+                    programs=per_programs))
+    rows.append(row("flat/pack_flat", t_pack_flat * 1e6,
+                    programs=flat_programs,
+                    speedup=t_pack_per / t_pack_flat))
+    t_ser_per = _time(lambda: messages.message_to_wire(msg_per), iters)
+    t_ser_flat = _time(lambda: messages.message_to_wire(msg_flat), iters)
+    rows.append(row("flat/serialize_per_leaf", t_ser_per * 1e6,
+                    bytes=messages.packed_wire_bytes(msg_per)))
+    rows.append(row("flat/serialize_flat", t_ser_flat * 1e6,
+                    bytes=messages.packed_wire_bytes(msg_flat),
+                    speedup=t_ser_per / t_ser_flat))
+
+    # aggregate across cohort sizes
+    msgs_per = [messages.pack_message(t, qcfg) for t in trees]
+    msgs_flat = [messages.pack_message(t, qcfg, flat=True)
+                 for t in trees]
+    for k in (4, 8, 16):
+        w = jnp.ones((k,), jnp.float32)
+        mp, mf = msgs_per[:k], msgs_flat[:k]
+        n0 = _COMPILES[0]
+        _block(aggregation.fedavg_packed(mp, w))
+        agg_per_programs = _COMPILES[0] - n0
+        n0 = _COMPILES[0]
+        _block(aggregation.fedavg_packed(mf, w))
+        agg_flat_programs = _COMPILES[0] - n0
+        t_per = _time(
+            lambda: _block(aggregation.fedavg_packed(mp, w)), iters)
+        t_flat = _time(
+            lambda: _block(aggregation.fedavg_packed(mf, w)), iters)
+        rows.append(row(f"flat/agg_per_leaf_k{k}", t_per * 1e6,
+                        programs=agg_per_programs,
+                        cohorts_per_sec=1 / t_per))
+        rows.append(row(f"flat/agg_flat_k{k}", t_flat * 1e6,
+                        programs=agg_flat_programs,
+                        cohorts_per_sec=1 / t_flat,
+                        speedup=t_per / t_flat))
     return rows
 
 
@@ -316,16 +431,26 @@ def main() -> None:
                     help="event-driven FedBuff engine sweep")
     ap.add_argument("--sparse", action="store_true",
                     help="sparse-delta wire sweep (bytes + scatter-add)")
+    ap.add_argument("--flat", action="store_true",
+                    help="flat-tree codec sweep (pack/serialize/agg, "
+                         "per-leaf vs fused flat)")
     ap.add_argument("--arrivals", type=int, default=12,
                     help="virtual arrivals for the --async sweep")
+    ap.add_argument("--json", type=str, default=None, metavar="PATH",
+                    help="also write the sweep rows as JSON to PATH")
     args = ap.parse_args()
     if args.clients < 1 or args.samples < 1 or args.iters < 1:
         ap.error("--clients/--samples/--iters must be >= 1")
     if args.arrivals < 1:
         ap.error("--arrivals must be >= 1")
-    if args.sparse:
+    if args.flat:
+        sweep = "flat"
+        rows = run_flat(args.clients, args.samples, args.iters)
+    elif args.sparse:
+        sweep = "sparse"
         rows = run_sparse(args.clients, args.samples, args.iters)
     elif args.async_:
+        sweep = "async"
         rows = run_async(args.clients, args.samples, args.arrivals)
     elif args.rank_profile:
         try:
@@ -334,12 +459,24 @@ def main() -> None:
             ap.error("--rank-profile must be comma-separated ints")
         if not profile or any(r < 1 for r in profile):
             ap.error("--rank-profile ranks must be >= 1")
+        sweep = "rank_profile"
         rows = run_rank_profile(profile, args.clients, args.samples,
                                 args.iters)
     else:
+        sweep = "round"
         rows = run(args.clients, args.samples, args.iters)
-    for row in rows:
-        print(row)
+    for r in rows:
+        print(format_row(r))
+    if args.json:
+        with open(args.json, "w") as f:
+            json.dump({"sweep": sweep,
+                       "args": {"clients": args.clients,
+                                "samples": args.samples,
+                                "iters": args.iters,
+                                "arrivals": args.arrivals,
+                                "rank_profile": args.rank_profile},
+                       "rows": rows}, f, indent=1)
+        print(f"# wrote {len(rows)} rows to {args.json}")
 
 
 if __name__ == "__main__":

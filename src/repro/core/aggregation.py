@@ -32,7 +32,9 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.core import flat as flatcodec
 from repro.core import lora, messages
+from repro.core.flat import FlatPackedMessage, is_flat_message
 from repro.core.messages import is_packed_leaf, is_wire_leaf
 from repro.core.quant import QuantConfig
 from repro.core.sparse import is_sparse_leaf
@@ -79,7 +81,17 @@ def fedavg_packed(msgs: list[Any], weights: Array) -> Any:
     accumulator per leaf. Unquantized (fp passthrough) leaves take the
     plain weighted mean. Numerically equal (fp32 tolerance) to
     ``fedavg_quantized`` on the same client trees (dense case).
+
+    FLAT-TREE messages (``core/flat.py``) take the fast path: the WHOLE
+    K-client cohort unpacks + dequantizes + reduces in ONE fused kernel
+    launch over the shared flat layout. A mixed flat/per-leaf buffer
+    falls back through ``as_tree`` (bit-identical payload slices).
     """
+    if msgs and all(is_flat_message(m) for m in msgs) \
+            and len({m.layout for m in msgs}) == 1:
+        return flatcodec.fedavg_packed_flat(msgs, weights)
+    if any(is_flat_message(m) for m in msgs):
+        msgs = [m.as_tree() if is_flat_message(m) else m for m in msgs]
     w = weights / jnp.sum(weights)
 
     def agg(*leaves):
@@ -109,7 +121,7 @@ def fedavg_packed(msgs: list[Any], weights: Array) -> Any:
                 jnp.stack([m.zp for m in leaves]),
                 w.astype(jnp.float32), l0.bits)          # (C, N_pad)
             x2d = out[:, : l0.n_per_channel]
-            return messages._from_channel_2d(
+            return kops.from_channel_first_2d(
                 x2d, l0.shape, l0.per_stack).astype(l0.dtype)
         x = jnp.stack([m.astype(jnp.float32) for m in leaves])
         wr = w.reshape((-1,) + (1,) * (x.ndim - 1)).astype(jnp.float32)
@@ -254,7 +266,8 @@ def ef_encode(tree: Any, residual: Any, qcfg: QuantConfig
 
 
 def ef_encode_packed(tree: Any, residual: Any, qcfg: QuantConfig,
-                     density: Optional[float] = None) -> tuple[Any, Any]:
+                     density: Optional[float] = None,
+                     flat: bool = False) -> tuple[Any, Any]:
     """Wire-true EF uplink: pack Q(x + e), keep e' = (x + e) - deq(msg).
 
     Returns (packed wire message, new_residual) — the client computes its
@@ -262,19 +275,23 @@ def ef_encode_packed(tree: Any, residual: Any, qcfg: QuantConfig,
     compensation is exact w.r.t. the wire format. With a sparse wire
     (``density < 1``) the reconstruction is zero at the dropped
     positions, so e' automatically absorbs the FULL dropped mass on top
-    of the survivors' quantization error (the FLASC EF rule)."""
+    of the survivors' quantization error (the FLASC EF rule).
+    ``flat=True`` emits the flat-tree wire form (one fused pack)."""
     sparse_on = density is not None and density < 1.0
     if not qcfg.enabled and not sparse_on:
         return tree, residual
     comp = jax.tree.map(lambda x, e: x.astype(jnp.float32) + e,
                         tree, residual)
-    msg = messages.pack_message(comp, qcfg, density=density)
+    msg = messages.pack_message(comp, qcfg, density=density, flat=flat)
     recon = messages.unpack_message(msg)
     new_res = jax.tree.map(lambda c, r: c - r.astype(jnp.float32),
                            comp, recon)
 
     # the wire message must advertise the ORIGINAL adapter dtypes (comp is
     # fp32), or the aggregated global tree silently promotes to fp32
+    if is_flat_message(msg):
+        return msg.replace_dtypes(tree), new_res
+
     def redtype(m, x):
         if is_wire_leaf(m):
             return dataclasses.replace(m, dtype=x.dtype)
@@ -387,9 +404,11 @@ class SVDRecombinationAggregator(FedAvgAggregator):
         cap = max(r for r in ranks if r is not None)
         # dequantize ONLY the adapter pairs (the recombination inputs);
         # every other leaf keeps the fused-kernel result from `base` and
-        # the K full fp32 client trees are never materialized
+        # the K full fp32 client trees are never materialized (flat
+        # messages re-expose their per-leaf tree as payload slices first)
+        trees = [m.as_tree() if is_flat_message(m) else m for m in msgs]
         trees = [lora._walk_pairs(m, messages.unpack_message)
-                 if message_is_packed(m) else m for m in msgs]
+                 if message_is_packed(m) else m for m in trees]
         w = jnp.asarray(weights, jnp.float32)
         w = w / jnp.sum(w)
         self.served_ranks = {}

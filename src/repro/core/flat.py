@@ -1,0 +1,457 @@
+"""Flat-tree wire codec: ONE fused kernel launch per message.
+
+The per-leaf packed codec (``core/messages.py``) pays a per-leaf tax
+everywhere: one ``quant_pack`` pallas_call per quantizable leaf on the
+client, one ``dequant_agg`` call per leaf on the server, one device->host
+sync per leaf at serialization — with a distinct compiled program per
+(leaf shape x bits). Weight-only-quant inference stacks (TensorRT-LLM
+style) fuse the whole packed tensor set into one launch over a flat
+buffer; this module does the same for a FLoCoRA message:
+
+  * :class:`TreeLayout` — a STATIC row map, computed once per
+    (tree-structure, bits, per_stack) signature and cached: every
+    quantizable leaf's channel-2D view is assigned a row range in a
+    single ``(C_total, Nw_max)`` uint32 payload with a per-row valid-
+    length vector and fp32 ``scale``/``zp`` sidecars of length
+    ``C_total``;
+  * :class:`FlatPackedMessage` — the wire leaf: the flat payload + the
+    layout + the fp passthrough leaves. Serializes through the same v3
+    header to byte-IDENTICAL per-leaf buffers (``message_wire_bytes``
+    does not move), in one device->host transfer;
+  * :func:`pack_flat` / ``FlatPackedMessage.unpack`` /
+    :func:`fedavg_packed_flat` — pack, decode, and K-client aggregate,
+    each ONE jitted program containing ONE ragged-row kernel launch
+    (``quant_pack_rows`` / ``dequant_agg(n_valid=...)``), regardless of
+    how many leaves the adapter tree has. Per-message dispatches drop
+    from O(#leaves) to O(1) and compile count from O(#leaf-shapes x
+    bits) to O(bits).
+
+The per-leaf :class:`~repro.core.messages.PackedLeaf` path stays as the
+byte/numerics oracle the flat path is tested against
+(tests/test_flat_codec.py).
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.kernels import ops as kops
+from repro.kernels import ref as kref
+from repro.utils.tree import _path_str
+
+Array = jax.Array
+
+
+# ---------------------------------------------------------------------------
+# Host-side word/bit ops (shared with PackedLeaf.to_wire — no device pass)
+# ---------------------------------------------------------------------------
+
+def strip_row_padding(words: np.ndarray, bits: int,
+                      n_valid: int) -> np.ndarray:
+    """(C, Nw) uint32 kernel-layout words -> the exact wire payload:
+    the first ``n_valid`` levels of every row packed contiguously
+    little-endian, ``ceil(C * n_valid * bits / 8)`` uint8 bytes.
+
+    Pure vectorized numpy (word -> bit -> byte views); replaces the old
+    unpack-to-levels-and-repack jnp round-trip through the device."""
+    w = np.ascontiguousarray(np.asarray(words, dtype="<u4"))
+    u8 = w.view(np.uint8).reshape(w.shape[0], -1)
+    b = np.unpackbits(u8, axis=1, bitorder="little")[:, : n_valid * bits]
+    return np.packbits(b.reshape(-1), bitorder="little")
+
+
+def rows_from_wire(payload_u8: np.ndarray, bits: int, channels: int,
+                   n_valid: int, nw: int) -> np.ndarray:
+    """Inverse of :func:`strip_row_padding`: wire bytes -> (channels, nw)
+    uint32 kernel-layout words with the canonical zero tail."""
+    b = np.unpackbits(np.asarray(payload_u8, np.uint8),
+                      bitorder="little")[: channels * n_valid * bits]
+    full = np.zeros((channels, nw * 32), np.uint8)
+    full[:, : n_valid * bits] = b.reshape(channels, n_valid * bits)
+    by = np.packbits(full, axis=1, bitorder="little")
+    return np.ascontiguousarray(by).view("<u4").reshape(channels, nw)
+
+
+# ---------------------------------------------------------------------------
+# Static layout (computed once per tree signature, cached)
+# ---------------------------------------------------------------------------
+
+_lane = kops.lane_levels      # kernel column alignment (single source)
+
+
+@dataclasses.dataclass(frozen=True)
+class LeafSpec:
+    """Static row-map entry for one leaf of the message tree."""
+    path: str                 # flatten-order path string (wire entry name)
+    shape: tuple              # original tensor shape
+    dtype_str: str            # original dtype (str: keeps the spec hashable)
+    quantized: bool           # >= 2-D leaves quantize; vectors travel fp
+    row_start: int = 0        # first row in the flat buffer
+    rows: int = 0             # channel count C_i
+    n_valid: int = 0          # true levels per row
+
+    @property
+    def dtype(self):
+        return jnp.dtype(self.dtype_str)
+
+
+@dataclasses.dataclass(frozen=True)
+class TreeLayout:
+    """Row map of a whole message tree inside one flat packed buffer."""
+    treedef: Any              # jax treedef of the message tree
+    leaves: tuple             # tuple[LeafSpec, ...] in flatten order
+    bits: int
+    per_stack: bool
+    c_total: int              # total channel rows across quantized leaves
+    n_max: int                # padded column count (kernel lane multiple)
+
+    @property
+    def nw_max(self) -> int:
+        return self.n_max * self.bits // 32
+
+    def leaf_nw(self, spec: LeafSpec) -> int:
+        """spec's own lane-padded word count (the per-leaf kernel's
+        payload width — what ``PackedLeaf`` for this leaf would hold)."""
+        lane = _lane(self.bits)
+        n_pad = ((spec.n_valid + lane - 1) // lane) * lane
+        return n_pad * self.bits // 32
+
+    def n_valid_vec(self) -> np.ndarray:
+        nv = np.zeros((self.c_total,), np.int32)
+        for s in self.leaves:
+            if s.quantized:
+                nv[s.row_start: s.row_start + s.rows] = s.n_valid
+        return nv
+
+
+def _channels_of(shape: tuple, per_stack: bool) -> int:
+    if per_stack and len(shape) >= 3:
+        return int(np.prod(shape[:-2])) * shape[-1]
+    return shape[-1]
+
+
+_LAYOUT_CACHE: dict = {}
+
+
+def layout_for(tree: Any, bits: int,
+               per_stack: bool = False) -> Optional[TreeLayout]:
+    """The (cached) flat layout of ``tree``'s message, or None when the
+    tree has no quantizable leaf. Key: (treedef, leaf shapes/dtypes,
+    bits, per_stack) — one layout per tree SIGNATURE, however many
+    messages flow through it."""
+    flat, treedef = jax.tree_util.tree_flatten_with_path(tree)
+    sig = (treedef, bits, per_stack,
+           tuple((tuple(x.shape), str(jnp.dtype(x.dtype)))
+                 for _, x in flat))
+    got = _LAYOUT_CACHE.get(sig)
+    if got is not None:
+        return got
+    specs, row, n_big = [], 0, 0
+    for path, x in flat:
+        shape = tuple(int(d) for d in x.shape)
+        dts = str(jnp.dtype(x.dtype))
+        if len(shape) < 2:        # paper rule: vectors travel fp32
+            specs.append(LeafSpec(_path_str(path), shape, dts, False))
+            continue
+        c = _channels_of(shape, per_stack)
+        n = int(np.prod(shape)) // c
+        specs.append(LeafSpec(_path_str(path), shape, dts, True,
+                              row_start=row, rows=c, n_valid=n))
+        row += c
+        n_big = max(n_big, n)
+    if row == 0:
+        _LAYOUT_CACHE[sig] = None
+        return None
+    lane = _lane(bits)
+    n_max = ((n_big + lane - 1) // lane) * lane
+    layout = TreeLayout(treedef, tuple(specs), bits, per_stack, row, n_max)
+    _LAYOUT_CACHE[sig] = layout
+    return layout
+
+
+# ---------------------------------------------------------------------------
+# The three fused programs (ONE jit + ONE kernel launch each)
+# ---------------------------------------------------------------------------
+
+@partial(jax.jit, static_argnames=("layout",))
+def _pack_flat_impl(leaves: tuple, layout: TreeLayout):
+    fp = [x for x, s in zip(leaves, layout.leaves) if not s.quantized]
+    if kops._interpret():
+        # Off-TPU lowering: the SAME single program (one dispatch, one
+        # compile), but each leaf's rows are quantized at their compact
+        # width and written into the word buffer — the rectangular
+        # (C_total, N_max) fp32 intermediate would be padding-dominated
+        # on a CPU. Words are bit-identical to the kernel's.
+        payload = jnp.zeros((layout.c_total, layout.nw_max), jnp.uint32)
+        per = 32 // layout.bits
+        scales, zps = [], []
+        for x, spec in zip(leaves, layout.leaves):
+            if not spec.quantized:
+                continue
+            x2d = kops.to_channel_first_2d(
+                x, layout.per_stack).astype(jnp.float32)
+            x2d = jnp.pad(x2d, ((0, 0), (0, (-spec.n_valid) % per)))
+            nv = jnp.full((spec.rows,), spec.n_valid, jnp.int32)
+            pk, s, z = kops._quant_pack_rows_jnp(x2d, nv, layout.bits)
+            payload = jax.lax.dynamic_update_slice(
+                payload, pk, (spec.row_start, 0))
+            scales.append(s)
+            zps.append(z)
+        return payload, jnp.concatenate(scales), jnp.concatenate(zps), \
+            tuple(fp)
+    rows = []
+    for x, spec in zip(leaves, layout.leaves):
+        if spec.quantized:
+            x2d = kops.to_channel_first_2d(
+                x, layout.per_stack).astype(jnp.float32)
+            rows.append(jnp.pad(
+                x2d, ((0, 0), (0, layout.n_max - x2d.shape[1]))))
+    flat = jnp.concatenate(rows, axis=0)
+    nv = jnp.asarray(layout.n_valid_vec())
+    payload, scale, zp = kops.quant_pack_rows(flat, nv, layout.bits)
+    return payload, scale, zp, tuple(fp)
+
+
+@partial(jax.jit, static_argnames=("layout",))
+def _unpack_flat_impl(payload, scale, zp, fp_leaves: tuple,
+                      layout: TreeLayout):
+    interp = kops._interpret()
+    per = 32 // layout.bits
+    if not interp:
+        lv = kref.unpack_words(payload, layout.bits).astype(jnp.float32)
+        x = (lv - zp[:, None]) * scale[:, None]
+    out, fpi = [], 0
+    for spec in layout.leaves:
+        if spec.quantized:
+            r0, r1 = spec.row_start, spec.row_start + spec.rows
+            if interp:      # compact per-leaf slices, same single program
+                nw = (spec.n_valid + per - 1) // per
+                lw = kref.unpack_words(
+                    payload[r0:r1, :nw],
+                    layout.bits)[:, : spec.n_valid].astype(jnp.float32)
+                x2d = (lw - zp[r0:r1, None]) * scale[r0:r1, None]
+            else:
+                x2d = x[r0:r1, : spec.n_valid]
+            out.append(kops.from_channel_first_2d(
+                x2d, spec.shape, layout.per_stack).astype(spec.dtype))
+        else:
+            out.append(fp_leaves[fpi])
+            fpi += 1
+    return jax.tree_util.tree_unflatten(layout.treedef, out)
+
+
+@partial(jax.jit, static_argnames=("layout",))
+def _fedavg_flat_impl(payloads: tuple, scales: tuple, zps: tuple,
+                      fps: tuple, weights, layout: TreeLayout):
+    w = weights / jnp.sum(weights)
+    wf = w.astype(jnp.float32)
+    interp = kops._interpret()
+    if not interp:
+        agg = kops.dequant_agg_rows(jnp.stack(payloads),
+                                    jnp.stack(scales), jnp.stack(zps),
+                                    wf, jnp.asarray(layout.n_valid_vec()),
+                                    layout.bits)
+    else:
+        # off-TPU: same single program, but each leaf's row/word slice
+        # unpacks + reduces at its compact width (see _pack_flat_impl)
+        P = jnp.stack(payloads)
+        S = jnp.stack(scales)
+        Z = jnp.stack(zps)
+        per = 32 // layout.bits
+    out, fpi = [], 0
+    for spec in layout.leaves:
+        if spec.quantized:
+            if interp:
+                r0, r1 = spec.row_start, spec.row_start + spec.rows
+                nw = (spec.n_valid + per - 1) // per
+                lv = kref.unpack_words(
+                    P[:, r0:r1, :nw],
+                    layout.bits)[..., : spec.n_valid].astype(jnp.float32)
+                deq = (lv - Z[:, r0:r1, None]) * S[:, r0:r1, None]
+                x2d = jnp.einsum("k,kcn->cn", wf, deq)
+            else:
+                x2d = agg[spec.row_start: spec.row_start + spec.rows,
+                          : spec.n_valid]
+            out.append(kops.from_channel_first_2d(
+                x2d, spec.shape, layout.per_stack).astype(spec.dtype))
+        else:
+            x = jnp.stack([f[fpi].astype(jnp.float32) for f in fps])
+            wr = w.reshape((-1,) + (1,) * (x.ndim - 1)).astype(jnp.float32)
+            out.append(jnp.sum(x * wr, axis=0).astype(spec.dtype))
+            fpi += 1
+    return jax.tree_util.tree_unflatten(layout.treedef, out)
+
+
+# ---------------------------------------------------------------------------
+# The wire leaf
+# ---------------------------------------------------------------------------
+
+@jax.tree_util.register_pytree_node_class
+@dataclasses.dataclass
+class FlatPackedMessage:
+    """A whole quantized message as ONE flat packed buffer.
+
+    ``payload`` is the ``(C_total, Nw_max)`` uint32 word buffer (rows =
+    every quantizable leaf's channels, stacked in flatten order, each
+    row zero-padded past its leaf's true length); ``scale``/``zp`` are
+    the fp32 sidecars of length ``C_total``; ``fp_leaves`` carries the
+    unquantized (1-D) leaves in flatten order. ``layout`` is the static
+    row map."""
+    payload: Array            # (C_total, Nw_max) uint32
+    scale: Array              # (C_total,) fp32
+    zp: Array                 # (C_total,) fp32
+    fp_leaves: tuple          # fp passthrough leaves, flatten order
+    layout: TreeLayout        # static
+
+    def tree_flatten(self):
+        return ((self.payload, self.scale, self.zp, self.fp_leaves),
+                (self.layout,))
+
+    @classmethod
+    def tree_unflatten(cls, aux, children):
+        return cls(*children, *aux)
+
+    @property
+    def bits(self) -> int:
+        return self.layout.bits
+
+    @property
+    def per_stack(self) -> bool:
+        return self.layout.per_stack
+
+    def shape_tree(self) -> Any:
+        """Shape/dtype-only view with the ORIGINAL tree structure, for
+        shape walks (adapter-pair/rank detection) that never touch a
+        payload."""
+        return jax.tree_util.tree_unflatten(
+            self.layout.treedef,
+            [jax.ShapeDtypeStruct(s.shape, s.dtype)
+             for s in self.layout.leaves])
+
+    def replace_dtypes(self, like: Any) -> "FlatPackedMessage":
+        """Advertise ``like``'s leaf dtypes (EF packs an fp32-compensated
+        tree but the wire must carry the original adapter dtypes)."""
+        dts = [str(jnp.dtype(x.dtype)) for x in jax.tree.leaves(like)]
+        specs = tuple(dataclasses.replace(s, dtype_str=d)
+                      for s, d in zip(self.layout.leaves, dts))
+        layout = dataclasses.replace(self.layout, leaves=specs)
+        fp = tuple(x.astype(jnp.dtype(d)) for x, d in zip(
+            self.fp_leaves,
+            [d for s, d in zip(self.layout.leaves, dts)
+             if not s.quantized]))
+        return FlatPackedMessage(self.payload, self.scale, self.zp, fp,
+                                 layout)
+
+    # -- decode -------------------------------------------------------------
+    def unpack(self) -> Any:
+        """-> fp tree (original structure/dtypes); one jitted program."""
+        return _unpack_flat_impl(self.payload, self.scale, self.zp,
+                                 self.fp_leaves, self.layout)
+
+    def as_tree(self) -> Any:
+        """-> the equivalent per-leaf ``PackedLeaf`` tree (row/col slices
+        of the flat buffer; bit-identical payloads). The escape hatch for
+        consumers that walk message trees (SVD recombination, mixed
+        per-leaf/flat buffers)."""
+        from repro.core.messages import PackedLeaf
+        lo = self.layout
+        out, fpi = [], 0
+        for spec in lo.leaves:
+            if spec.quantized:
+                r0, r1 = spec.row_start, spec.row_start + spec.rows
+                out.append(PackedLeaf(
+                    self.payload[r0:r1, : lo.leaf_nw(spec)],
+                    self.scale[r0:r1], self.zp[r0:r1], spec.shape,
+                    spec.dtype, lo.bits, lo.per_stack))
+            else:
+                out.append(self.fp_leaves[fpi])
+                fpi += 1
+        return jax.tree_util.tree_unflatten(lo.treedef, out)
+
+    # -- serialization (the actual bytes on the wire) -----------------------
+    def to_wire_entries(self) -> list:
+        """[(path, buffers)] byte-IDENTICAL to the per-leaf codec's
+        ``message_to_wire`` body, from ONE device->host transfer."""
+        lo = self.layout
+        words = np.asarray(jax.device_get(self.payload))
+        scale = np.asarray(jax.device_get(self.scale), np.float32)
+        zp = np.asarray(jax.device_get(self.zp), np.float32)
+        out, fpi = [], 0
+        for spec in lo.leaves:
+            if spec.quantized:
+                r0, r1 = spec.row_start, spec.row_start + spec.rows
+                out.append((spec.path, {
+                    "payload": strip_row_padding(words[r0:r1], lo.bits,
+                                                 spec.n_valid),
+                    "scale": scale[r0:r1], "zp": zp[r0:r1]}))
+            else:
+                out.append((spec.path, {
+                    "payload": np.asarray(self.fp_leaves[fpi],
+                                          np.float32)}))
+                fpi += 1
+        return out
+
+    @classmethod
+    def from_wire_entries(cls, entries: list,
+                          layout: TreeLayout) -> "FlatPackedMessage":
+        """Rebuild the flat kernel-layout buffer from serialized wire
+        buffers (inverse of :meth:`to_wire_entries`)."""
+        bufs = dict(entries)
+        payload = np.zeros((layout.c_total, layout.nw_max), np.uint32)
+        scale = np.zeros((layout.c_total,), np.float32)
+        zp = np.zeros((layout.c_total,), np.float32)
+        fp = []
+        for spec in layout.leaves:
+            b = bufs[spec.path]
+            if spec.quantized:
+                r0, r1 = spec.row_start, spec.row_start + spec.rows
+                payload[r0:r1] = rows_from_wire(
+                    b["payload"], layout.bits, spec.rows, spec.n_valid,
+                    layout.nw_max)
+                scale[r0:r1] = np.asarray(b["scale"], np.float32)
+                zp[r0:r1] = np.asarray(b["zp"], np.float32)
+            else:
+                fp.append(jnp.asarray(b["payload"]).reshape(
+                    spec.shape).astype(spec.dtype))
+        return cls(jnp.asarray(payload), jnp.asarray(scale),
+                   jnp.asarray(zp), tuple(fp), layout)
+
+    def wire_bytes(self) -> int:
+        """Real serialized size (measured from the buffers)."""
+        return sum(b.nbytes for _, bufs in self.to_wire_entries()
+                   for b in bufs.values())
+
+
+def is_flat_message(t: Any) -> bool:
+    return isinstance(t, FlatPackedMessage)
+
+
+# ---------------------------------------------------------------------------
+# Codec entry points
+# ---------------------------------------------------------------------------
+
+def pack_flat(tree: Any, bits: int, per_stack: bool = False) -> Any:
+    """Trainable tree -> :class:`FlatPackedMessage` in one fused launch
+    (falls back to the tree itself when nothing is quantizable, matching
+    the per-leaf codec's passthrough)."""
+    layout = layout_for(tree, bits, per_stack)
+    if layout is None:
+        return tree
+    payload, scale, zp, fp = _pack_flat_impl(
+        tuple(jax.tree.leaves(tree)), layout)
+    return FlatPackedMessage(payload, scale, zp, fp, layout)
+
+
+def fedavg_packed_flat(msgs: list, weights) -> Any:
+    """Weighted mean over K flat messages sharing one layout: unpack +
+    dequant + reduce of the WHOLE cohort in one fused kernel launch."""
+    lo = msgs[0].layout
+    return _fedavg_flat_impl(
+        tuple(m.payload for m in msgs), tuple(m.scale for m in msgs),
+        tuple(m.zp for m in msgs), tuple(m.fp_leaves for m in msgs),
+        jnp.asarray(weights, jnp.float32), lo)

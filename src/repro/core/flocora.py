@@ -110,6 +110,10 @@ class FLoCoRAConfig:
     # FLASC-style top-k sparsification of the client UPLINK (None = dense
     # wire, the paper's setting); downlinks always travel dense
     sparsity: Optional[SparsityConfig] = None
+    # flat-tree wire codec (core/flat.py): pack/decode/aggregate each
+    # DENSE quantized message in one fused kernel launch. Byte-identical
+    # wire payloads; False selects the per-leaf oracle codec.
+    flat_wire: bool = True
 
     def __post_init__(self):
         if self.rank_schedule is not None \
@@ -160,7 +164,8 @@ def server_downlink(global_trainable: Any, cfg: FLoCoRAConfig,
                                                  method="slice")
     if not cfg.qcfg.enabled:
         return global_trainable
-    return messages.pack_message(global_trainable, cfg.qcfg)
+    return messages.pack_message(global_trainable, cfg.qcfg,
+                                 flat=cfg.flat_wire)
 
 
 def broadcast(global_trainable: Any, cfg: FLoCoRAConfig,
@@ -189,11 +194,12 @@ def client_uplink(trainable: Any, cfg: FLoCoRAConfig,
         if ef_residual is None:
             ef_residual = aggregation.ef_init(trainable)
         return aggregation.ef_encode_packed(trainable, ef_residual,
-                                            cfg.qcfg, density=density)
+                                            cfg.qcfg, density=density,
+                                            flat=cfg.flat_wire)
     if not wire_on:
         return trainable, ef_residual
-    return messages.pack_message(trainable, cfg.qcfg,
-                                 density=density), ef_residual
+    return messages.pack_message(trainable, cfg.qcfg, density=density,
+                                 flat=cfg.flat_wire), ef_residual
 
 
 def server_round(stacked_client_trainables: Any, weights: Array,

@@ -283,7 +283,11 @@ def _walk_pairs(tree: Any, fn):
 
 
 def tree_ranks(tree: Any) -> tuple[int, ...]:
-    """Sorted distinct adapter ranks found in a (fp or packed) tree."""
+    """Sorted distinct adapter ranks found in a (fp or packed) tree.
+    A flat-tree wire message walks through its shape-only view (rank
+    detection never touches a payload)."""
+    if hasattr(tree, "shape_tree"):          # FlatPackedMessage
+        tree = tree.shape_tree()
     found: set[int] = set()
 
     def rec(pair):

@@ -17,6 +17,11 @@ Two codecs share the quantization math:
     quantized leaf becomes a :class:`PackedLeaf` holding uint32-word
     payloads (the Pallas ``quant_pack`` layout) + fp32 sidecars, and
     serializes to exactly ``message_wire_bytes`` bytes via ``to_wire``.
+    With ``flat=True`` the whole message instead packs as ONE
+    :class:`~repro.core.flat.FlatPackedMessage` buffer in a single
+    fused kernel launch (``core/flat.py``) — byte-identical wire form,
+    O(1) dispatches; the engines route their dense quantized exchanges
+    through it via ``FLoCoRAConfig.flat_wire`` (default on).
 
 Sparse uplinks (wire v3, FLASC-style — see ``core/sparse.py``): with a
 ``density < 1`` the quantizable leaves become :class:`SparseLeaf`
@@ -37,7 +42,9 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.core import flat as flatcodec
 from repro.core import quant, sparse
+from repro.core.flat import FlatPackedMessage, is_flat_message
 from repro.core.quant import QuantConfig
 from repro.core.sparse import SparseLeaf, is_sparse_leaf
 from repro.kernels import ops as kops
@@ -210,11 +217,12 @@ class PackedLeaf:
 
         The payload re-packs the valid levels of every channel contiguously
         (no lane/word padding), so ``sum(buf.nbytes) == leaf_wire_bytes``.
-        """
-        lv = kref.unpack_words(self.payload, self.bits)[:, :self.n_per_channel]
-        payload_u8 = np.asarray(
-            quant.pack_levels(lv.reshape(-1).astype(jnp.uint8), self.bits))
-        return {"payload": payload_u8,
+        Padding is stripped with vectorized host-side word/bit ops
+        (``flat.strip_row_padding``) — no unpack-and-repack round trip
+        through the device."""
+        words = np.asarray(jax.device_get(self.payload))
+        return {"payload": flatcodec.strip_row_padding(
+                    words, self.bits, self.n_per_channel),
                 "scale": np.asarray(self.scale, np.float32),
                 "zp": np.asarray(self.zp, np.float32)}
 
@@ -237,9 +245,7 @@ class PackedLeaf:
         return sum(b.nbytes for b in bufs.values())
 
 
-def _lane(bits: int) -> int:
-    """Kernel column alignment: 32/bits levels per word * 128 lanes."""
-    return (32 // bits) * 128
+_lane = kops.lane_levels      # kernel column alignment (single source)
 
 
 def _pack_rows(levels: Array, bits: int) -> Array:
@@ -250,24 +256,10 @@ def _pack_rows(levels: Array, bits: int) -> Array:
     return kref.pack_words(lv, bits)
 
 
-def _to_channel_2d(x: Array, per_stack: bool) -> Array:
-    """Channel-first 2D view matching the per-channel qparam groups."""
-    if per_stack and x.ndim >= 3:
-        s = int(np.prod(x.shape[:-2]))
-        x3 = jnp.swapaxes(x.reshape(s, x.shape[-2], x.shape[-1]), -1, -2)
-        return x3.reshape(s * x.shape[-1], x.shape[-2])
-    xm = jnp.moveaxis(x, -1, 0)
-    return xm.reshape(x.shape[-1], -1)
-
-
-def _from_channel_2d(x2d: Array, shape: tuple, per_stack: bool) -> Array:
-    if per_stack and len(shape) >= 3:
-        s = int(np.prod(shape[:-2]))
-        x3 = x2d.reshape(s, shape[-1], shape[-2])
-        return jnp.swapaxes(x3, -1, -2).reshape(shape)
-    x = x2d.reshape((shape[-1],) + tuple(shape[:-1]))
-    return jnp.moveaxis(x, 0, -1)
-
+# The channel-first-2D view helpers live next to the kernels they feed:
+# ``kops.to_channel_first_2d`` / ``kops.from_channel_first_2d`` are the
+# single canonical pair (the old ``messages._to_channel_2d`` twins are
+# gone).
 
 def _pack_2d_jnp(x2d: Array, bits: int):
     """Pure-jnp twin of ``kernels.ops.quant_pack``; vmap-safe, used where
@@ -292,19 +284,28 @@ def is_packed_leaf(t: Any) -> bool:
 
 
 def is_wire_leaf(t: Any) -> bool:
-    """True for any wire-form leaf (dense packed or sparse top-k)."""
-    return isinstance(t, (PackedLeaf, SparseLeaf))
+    """True for any wire-form leaf (dense packed, sparse top-k, or a
+    whole flat-tree message)."""
+    return isinstance(t, (PackedLeaf, SparseLeaf, FlatPackedMessage))
 
 
 def pack_message(tree: Any, cfg: QuantConfig, *,
                  use_kernel: bool = True,
-                 density: Optional[float] = None) -> Any:
+                 density: Optional[float] = None,
+                 flat: bool = False) -> Any:
     """Trainable tree -> wire message with real packed payloads.
 
     Quantizable leaves become :class:`PackedLeaf` (uint32 words + fp32
     sidecars via the fused Pallas ``quant_pack``); 1-D leaves pass through
     in fp32. ``use_kernel=False`` selects the pure-jnp twin (identical
     output; needed under vmap, e.g. the per-pod packing in launch).
+
+    ``flat=True`` selects the FLAT-TREE codec (``core/flat.py``): the
+    WHOLE message packs as one :class:`~repro.core.flat.FlatPackedMessage`
+    in a single fused kernel launch — byte-identical wire payloads, O(1)
+    dispatches/compiles instead of O(#leaves). The per-leaf path stays
+    as the oracle. Flat implies the kernel path and applies to the dense
+    quantized wire only (the sparse wire is per-tensor by construction).
 
     ``density < 1`` selects the FLASC-style sparse wire instead: each
     quantizable leaf becomes a :class:`SparseLeaf` (per-tensor top-k
@@ -315,6 +316,8 @@ def pack_message(tree: Any, cfg: QuantConfig, *,
     sparse_on = density is not None and density < 1.0
     if not cfg.enabled and not sparse_on:
         return tree
+    if flat and cfg.enabled and not sparse_on:
+        return flatcodec.pack_flat(tree, cfg.bits, cfg.per_stack)
 
     def pk(x):
         if not quantizable(x):
@@ -323,7 +326,7 @@ def pack_message(tree: Any, cfg: QuantConfig, *,
             return sparse.sparsify_leaf(x, density,
                                         cfg.bits if cfg.enabled else None,
                                         use_kernel=use_kernel)
-        x2d = _to_channel_2d(x, cfg.per_stack)
+        x2d = kops.to_channel_first_2d(x, cfg.per_stack)
         if use_kernel:
             payload, scale, zp = kops.quant_pack(x2d, cfg.bits)
         else:
@@ -336,16 +339,22 @@ def pack_message(tree: Any, cfg: QuantConfig, *,
 
 def unpack_message(msg: Any) -> Any:
     """Wire message -> fp tree (shape/dtype recorded in each leaf).
-    Sparse leaves densify (zeros at the dropped positions)."""
+    Sparse leaves densify (zeros at the dropped positions); a flat-tree
+    message decodes in one fused program."""
+    if is_flat_message(msg):
+        return msg.unpack()
 
     def up(t):
+        if is_flat_message(t):     # nested flat messages decode too
+            return t.unpack()
         if is_sparse_leaf(t):
             return t.densify()
         if not is_packed_leaf(t):
             return t
         lv = kref.unpack_words(t.payload, t.bits)[:, :t.n_per_channel]
         x2d = (lv.astype(jnp.float32) - t.zp[:, None]) * t.scale[:, None]
-        return _from_channel_2d(x2d, t.shape, t.per_stack).astype(t.dtype)
+        return kops.from_channel_first_2d(
+            x2d, t.shape, t.per_stack).astype(t.dtype)
 
     return jax.tree.map(up, msg, is_leaf=is_wire_leaf)
 
@@ -416,8 +425,18 @@ def message_to_wire(msg: Any, include_header: bool = True
     form).
 
     The first entry is the rank+density-tagged wire header
-    (``HEADER_KEY``) unless ``include_header=False``."""
+    (``HEADER_KEY``) unless ``include_header=False``. A flat-tree
+    message serializes from ONE device->host transfer to the SAME named
+    entries (byte-identical buffers) as the per-leaf codec."""
     from repro.utils.tree import _path_str
+    if is_flat_message(msg):
+        out = []
+        if include_header:
+            out.append((HEADER_KEY,
+                        {"header": wire_header(message_rank(msg),
+                                               msg.bits)}))
+        out.extend(msg.to_wire_entries())
+        return out
     flat, _ = jax.tree_util.tree_flatten_with_path(
         msg, is_leaf=is_wire_leaf)
     out = []
@@ -448,6 +467,9 @@ def message_from_wire(entries: list[tuple[str, dict]], like: Any) -> Any:
     bufs = dict(entries)
     if HEADER_KEY in bufs:
         parse_wire_header(bufs[HEADER_KEY]["header"])
+    if is_flat_message(like):
+        return FlatPackedMessage.from_wire_entries(
+            [(n, b) for n, b in entries if n != HEADER_KEY], like.layout)
     flat, treedef = jax.tree_util.tree_flatten_with_path(
         like, is_leaf=is_wire_leaf)
     leaves = []

@@ -226,8 +226,8 @@ class SparseLeaf:
                        None, None, tuple(shape), dtype, None, density)
         lv = quant.unpack_levels(jnp.asarray(buffers["payload"]), bits, k)
         # reproduce the kernel layout bit-exactly: zero levels padded to
-        # the (32/bits * 128)-lane multiple, as quant_pack emits
-        lane = (32 // bits) * 128
+        # the lane multiple, as quant_pack emits
+        lane = kops.lane_levels(bits)
         lvp = jnp.pad(lv.astype(jnp.uint32), (0, (-k) % lane))
         payload = kref.pack_words(lvp.reshape(1, -1), bits)
         return cls(idx, payload, jnp.asarray(buffers["scale"]),

@@ -18,7 +18,11 @@ replaces round lockstep with a VIRTUAL-CLOCK discrete-event simulation:
     global versions the server advanced since the client's dispatch;
   * FLUSH — every ``buffer_size`` arrivals the buffer aggregates into a
     new global version in ONE rank-bucketed pass on the fused
-    ``dequant_agg`` kernel (:meth:`FedBuffAggregator.flush`). FedBuff
+    ``dequant_agg`` kernel (:meth:`FedBuffAggregator.flush`); with
+    ``FLoCoRAConfig.flat_wire`` (default) the buffered messages are
+    FLAT-TREE wire leaves (core/flat.py), so a whole buffer's unpack +
+    dequantize + staleness-weighted reduce is ONE fused kernel launch
+    per rank bucket, not one per adapter leaf. FedBuff
     applies averaged client DELTAS, not averaged models: the new global
     is ``g + server_lr * (mean_u - mean_start)`` where ``mean_u`` is the
     fused buffered packed sum and ``mean_start`` the same

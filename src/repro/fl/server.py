@@ -19,7 +19,11 @@ Production-shaped features:
     the server aggregates the packed payloads on the fused dequant_agg
     kernel — per rank bucket when mixed — via a pluggable Aggregator
     strategy (zero-pad FedAvg, FLoRIST-style SVD recombination, FedBuff,
-    optional error feedback);
+    optional error feedback). With ``FLoCoRAConfig.flat_wire`` (default)
+    the dense quantized exchange rides the FLAT-TREE codec
+    (core/flat.py): each uplink packs and each cohort aggregates in ONE
+    fused kernel launch regardless of the adapter tree's leaf count,
+    with byte-identical wire payloads;
   * atomic checkpoint/resume of (round, global adapters, sampler RNG) —
     a restarted server continues the exact run; the RNG bit-generator
     state rides the JSON manifest directly;

@@ -6,6 +6,12 @@ aggregated adapter tree, WITHOUT materializing K dequantized fp32 copies
 is 4-16x smaller than fp32 — this fusion is what makes the paper's
 quantization a server-side win too, not just a wire win).
 
+Like ``quant_pack``, the valid-column count is PER ROW: a (C, 1) int32
+sidecar masks each row's tail so a whole flat-tree message (every leaf's
+channel rows stacked into one ragged buffer, core/flat.py) aggregates a
+K-client cohort in ONE launch — contributions past a row's length are
+forced to exact zero, so flat rows slice apart cleanly.
+
 Grid: (C/bc, K) with K innermost — each (bc, Nw) packed tile is unpacked,
 dequantized with its (per-client, per-channel) scale/zp and accumulated
 into the fp32 output block resident in VMEM across the K steps.
@@ -16,13 +22,14 @@ import functools
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 from jax.experimental import pallas as pl
 
 Array = jax.Array
 
 
-def _dequant_agg_kernel(packed_ref, scale_ref, zp_ref, w_ref, out_ref, *,
-                        bits: int):
+def _dequant_agg_kernel(packed_ref, scale_ref, zp_ref, w_ref, nv_ref,
+                        out_ref, *, bits: int):
     k = pl.program_id(1)
     per = 32 // bits
     words = packed_ref[0]                                  # (bc, Nw) uint32
@@ -34,7 +41,9 @@ def _dequant_agg_kernel(packed_ref, scale_ref, zp_ref, w_ref, out_ref, *,
     scale = scale_ref[0]                                   # (bc, 1)
     zp = zp_ref[0]
     w = w_ref[0, 0]
-    contrib = w * (lv - zp) * scale
+    nv = nv_ref[...]                                       # (bc, 1) int32
+    col = jax.lax.broadcasted_iota(jnp.int32, lv.shape, 1)
+    contrib = jnp.where(col < nv, w * (lv - zp) * scale, 0.0)
 
     @pl.when(k == 0)
     def _init():
@@ -45,15 +54,78 @@ def _dequant_agg_kernel(packed_ref, scale_ref, zp_ref, w_ref, out_ref, *,
         out_ref[...] += contrib
 
 
+def _dequant_agg_rows_kernel(packed_ref, scale_ref, zp_ref, w_ref, nv_ref,
+                             out_ref, *, bits: int):
+    """Flat-tree variant: the WHOLE K client dim rides in the block (the
+    packed payload is 4-16x smaller than fp32, so K tiles fit VMEM) and
+    the grid walks channel blocks only — one launch, one output pass."""
+    per = 32 // bits
+    words = packed_ref[...]                          # (K, bc, Nw) uint32
+    shifts = (jax.lax.broadcasted_iota(
+        jnp.uint32, (*words.shape, per), 3) * jnp.uint32(bits))
+    msk = jnp.uint32((1 << bits) - 1)
+    lv = ((words[..., None] >> shifts) & msk).astype(jnp.float32)
+    lv = lv.reshape(*words.shape[:2], words.shape[2] * per)  # (K, bc, N)
+    deq = (lv - zp_ref[...]) * scale_ref[...]        # sidecars (K, bc, 1)
+    acc = jnp.sum(w_ref[...][..., None] * deq, axis=0)       # (bc, N)
+    nv = nv_ref[...]                                 # (bc, 1) int32
+    col = jax.lax.broadcasted_iota(jnp.int32, acc.shape, 1)
+    out_ref[...] = jnp.where(col < nv, acc, 0.0)
+
+
+def dequant_agg_rows_pallas(packed: Array, scale: Array, zp: Array,
+                            weights: Array, n_valid: Array, bits: int, *,
+                            block_c: int = 8,
+                            interpret: bool = False) -> Array:
+    """packed (K, C, Nw) uint32; scale/zp (K, C); weights (K,);
+    n_valid (C,) per-row true lengths. One launch aggregates the whole
+    flat-tree cohort; tails past each row's length are exact zeros.
+    Returns (C, N) fp32."""
+    k, c, nw = packed.shape
+    per = 32 // bits
+    n = nw * per
+    assert c % block_c == 0
+    nv = jnp.asarray(n_valid, jnp.int32).reshape(c, 1)
+    grid = (c // block_c,)
+    out = pl.pallas_call(
+        functools.partial(_dequant_agg_rows_kernel, bits=bits),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((k, block_c, nw), lambda i: (0, i, 0)),
+            pl.BlockSpec((k, block_c, 1), lambda i: (0, i, 0)),
+            pl.BlockSpec((k, block_c, 1), lambda i: (0, i, 0)),
+            pl.BlockSpec((k, 1), lambda i: (0, 0)),
+            pl.BlockSpec((block_c, 1), lambda i: (i, 0)),
+        ],
+        out_specs=pl.BlockSpec((block_c, n), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((c, n), jnp.float32),
+        interpret=interpret,
+    )(packed, scale[..., None], zp[..., None], weights[:, None], nv)
+    return out
+
+
 def dequant_agg_pallas(packed: Array, scale: Array, zp: Array,
-                       weights: Array, bits: int, *, block_c: int = 8,
+                       weights: Array, bits: int, *,
+                       n_valid: int | Array | None = None,
+                       block_c: int = 8,
                        interpret: bool = False) -> Array:
     """packed (K, C, Nw) uint32; scale/zp (K, C); weights (K,).
+
+    ``n_valid`` (scalar or (C,) vector, default N) zeroes each row's
+    tail past its true length — shared by all K clients, since the row
+    layout is a property of the message structure, not the sender.
+
     Returns (C, N) fp32 weighted sum of dequantized messages."""
     k, c, nw = packed.shape
     per = 32 // bits
     n = nw * per
     assert c % block_c == 0
+    if n_valid is None:
+        n_valid = n
+    if isinstance(n_valid, (int, np.integer)):
+        nv = jnp.full((c, 1), n_valid, jnp.int32)
+    else:
+        nv = jnp.asarray(n_valid, jnp.int32).reshape(c, 1)
     grid = (c // block_c, k)
     out = pl.pallas_call(
         functools.partial(_dequant_agg_kernel, bits=bits),
@@ -63,9 +135,10 @@ def dequant_agg_pallas(packed: Array, scale: Array, zp: Array,
             pl.BlockSpec((1, block_c, 1), lambda i, kk: (kk, i, 0)),
             pl.BlockSpec((1, block_c, 1), lambda i, kk: (kk, i, 0)),
             pl.BlockSpec((1, 1), lambda i, kk: (kk, 0)),
+            pl.BlockSpec((block_c, 1), lambda i, kk: (i, 0)),
         ],
         out_specs=pl.BlockSpec((block_c, n), lambda i, kk: (i, 0)),
         out_shape=jax.ShapeDtypeStruct((c, n), jnp.float32),
         interpret=interpret,
-    )(packed, scale[..., None], zp[..., None], weights[:, None])
+    )(packed, scale[..., None], zp[..., None], weights[:, None], nv)
     return out

@@ -22,8 +22,7 @@ from jax.experimental import pallas as pl
 Array = jax.Array
 
 
-def _lora_matmul_kernel(x_ref, w_ref, a_ref, b_ref, out_ref, *, s: float,
-                        n_k: int):
+def _lora_matmul_kernel(x_ref, w_ref, a_ref, b_ref, out_ref, *, s: float):
     kk = pl.program_id(2)
     x = x_ref[...]
     acc = jnp.dot(x, w_ref[...], preferred_element_type=jnp.float32)
@@ -52,7 +51,7 @@ def lora_matmul_pallas(x: Array, w: Array, a: Array, b: Array, s: float, *,
     assert m % bm == 0 and n % bn == 0 and k % bk == 0
     grid = (m // bm, n // bn, k // bk)
     out = pl.pallas_call(
-        functools.partial(_lora_matmul_kernel, s=s, n_k=k // bk),
+        functools.partial(_lora_matmul_kernel, s=s),
         grid=grid,
         in_specs=[
             pl.BlockSpec((bm, bk), lambda i, j, kk: (i, kk)),

@@ -14,7 +14,8 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.kernels import ref
-from repro.kernels.dequant_agg import dequant_agg_pallas
+from repro.kernels.dequant_agg import dequant_agg_pallas, \
+    dequant_agg_rows_pallas
 from repro.kernels.lora_matmul import lora_matmul_pallas
 from repro.kernels.quant_pack import quant_pack_pallas
 
@@ -23,6 +24,14 @@ Array = jax.Array
 
 def _interpret() -> bool:
     return jax.default_backend() != "tpu"
+
+
+def lane_levels(bits: int) -> int:
+    """Kernel column alignment in LEVELS: 32/bits levels per uint32 word
+    x 128 lanes. The single source of truth for the codecs' payload
+    padding (per-leaf ``messages._pack_rows`` and the flat layout's
+    ``n_max`` must agree on it, or byte identity breaks)."""
+    return (32 // bits) * 128
 
 
 def _pad_to(x: Array, mult: int, axis: int) -> Array:
@@ -47,14 +56,88 @@ def quant_pack(x2d: Array, bits: int, block_c: int = 8):
     return packed[:c], scale[:c], zp[:c]
 
 
+def _quant_pack_rows_jnp(x2d: Array, nv: Array, bits: int):
+    """Bit-identical jnp twin of the ragged-row quant_pack kernel (same
+    formulas elementwise, exact min/max reductions, same little-endian
+    word packing)."""
+    qmax = (1 << bits) - 1
+    col = jax.lax.broadcasted_iota(jnp.int32, x2d.shape, 1)
+    valid = col < nv[:, None]
+    big = jnp.float32(3.4e38)
+    x = x2d.astype(jnp.float32)
+    xmin = jnp.minimum(jnp.min(jnp.where(valid, x, big), axis=1), 0.0)
+    xmax = jnp.maximum(jnp.max(jnp.where(valid, x, -big), axis=1), 0.0)
+    rng = xmax - xmin
+    scale = jnp.where(rng > 0, rng * jnp.float32(1.0 / qmax), 1.0)
+    zp = jnp.clip(jnp.round(-xmin / scale), 0, qmax)
+    q = jnp.round(x / scale[:, None]) + zp[:, None]
+    q = jnp.where(valid, jnp.clip(q, 0, qmax), 0).astype(jnp.uint32)
+    return ref.pack_words(q, bits), scale, zp
+
+
+@partial(jax.jit, static_argnames=("bits", "block_c"))
+def quant_pack_rows(x2d: Array, n_valid: Array, bits: int,
+                    block_c: int = 8):
+    """Ragged-row variant for the flat-tree codec: ``n_valid`` is a (C,)
+    int32 vector of per-row true lengths (rows are different leaves'
+    channels, so their valid widths differ). Columns must already be
+    padded to the kernel lane multiple (core/flat.py sizes the buffer).
+    One launch packs the WHOLE message.
+
+    Off-TPU this lowers to the bit-identical jnp twin INSIDE the same
+    jitted program (still one dispatch): the interpret-mode grid walk
+    scales with C_total and would tax exactly the per-message overhead
+    the flat codec removes."""
+    nv = jnp.asarray(n_valid, jnp.int32)
+    if _interpret():
+        return _quant_pack_rows_jnp(x2d, nv, bits)
+    xp = _pad_to(x2d, block_c, 0)
+    packed, scale, zp = quant_pack_pallas(xp, bits,
+                                          n_valid=_pad_to(nv, block_c, 0),
+                                          block_c=block_c)
+    c = x2d.shape[0]
+    return packed[:c], scale[:c], zp[:c]
+
+
+@partial(jax.jit, static_argnames=("bits", "block_c"))
+def dequant_agg_rows(packed: Array, scale: Array, zp: Array,
+                     weights: Array, n_valid: Array, bits: int,
+                     block_c: int = 8) -> Array:
+    """Flat-tree cohort aggregate: packed (K, C, Nw), sidecars (K, C),
+    per-row lengths (C,). ONE launch unpacks + dequantizes + reduces the
+    whole K-client message set; row tails come back as exact zeros.
+    Off-TPU: the bit-identical jnp twin inside the same program."""
+    nv = jnp.asarray(n_valid, jnp.int32)
+    w = weights.astype(jnp.float32)
+    zpz = jnp.where(scale > 0, zp, 0.0)
+    if _interpret():
+        lv = ref.unpack_words(packed, bits).astype(jnp.float32)
+        deq = (lv - zpz[..., None]) * scale[..., None]
+        out = jnp.einsum("k,kcn->cn", w, deq)
+        col = jax.lax.broadcasted_iota(jnp.int32, out.shape, 1)
+        return jnp.where(col < nv[:, None], out, 0.0)
+    kp = _pad_to(packed, block_c, 1)
+    sp = _pad_to(scale, block_c, 1)
+    out = dequant_agg_rows_pallas(kp, sp, _pad_to(zpz, block_c, 1), w,
+                                  _pad_to(nv, block_c, 0), bits,
+                                  block_c=block_c)
+    return out[: packed.shape[1]]
+
+
 @partial(jax.jit, static_argnames=("bits", "block_c"))
 def dequant_agg(packed: Array, scale: Array, zp: Array, weights: Array,
-                bits: int, block_c: int = 8) -> Array:
+                bits: int, block_c: int = 8,
+                n_valid: Array | None = None) -> Array:
+    """``n_valid`` (optional (C,) vector) masks each row's tail to exact
+    zero — the flat-tree codec aggregates every leaf of a K-client
+    cohort in one launch and slices the rows apart afterwards."""
     kp = _pad_to(packed, block_c, 1)
     sp = _pad_to(scale, block_c, 1)
     zpp = _pad_to(zp, block_c, 1)
+    nvp = None if n_valid is None else \
+        _pad_to(jnp.asarray(n_valid, jnp.int32), block_c, 0)
     out = dequant_agg_pallas(kp, sp, jnp.where(sp > 0, zpp, 0.0), weights,
-                             bits, block_c=block_c,
+                             bits, n_valid=nvp, block_c=block_c,
                              interpret=_interpret())
     return out[: packed.shape[1]]
 
@@ -81,9 +164,29 @@ def lora_matmul(x: Array, w: Array, a: Array, b: Array, s: float) -> Array:
                               block_k=bk, interpret=_interpret())
 
 
-# convenience: channel-first 2D view of an arbitrary message tensor
-def to_channel_first_2d(x: Array) -> Array:
-    """(..., C) -> (C, prod(...)) — matches the codec's last-axis-channel
-    convention."""
+# ---------------------------------------------------------------------------
+# Channel-first 2D views (the CANONICAL helpers — the codec's last-axis-
+# channel convention; every kernel caller reshapes through these)
+# ---------------------------------------------------------------------------
+
+def to_channel_first_2d(x: Array, per_stack: bool = False) -> Array:
+    """(..., C) -> (C, prod(...)): the channel-first 2D view matching the
+    per-channel qparam groups. ``per_stack`` keeps a leading stack dim's
+    slices as separate qparam rows ((s*C, n) for an (s, n, C) tensor)."""
+    if per_stack and x.ndim >= 3:
+        s = int(np.prod(x.shape[:-2]))
+        x3 = jnp.swapaxes(x.reshape(s, x.shape[-2], x.shape[-1]), -1, -2)
+        return x3.reshape(s * x.shape[-1], x.shape[-2])
     xm = jnp.moveaxis(x, -1, 0)
-    return xm.reshape(xm.shape[0], -1)
+    return xm.reshape(x.shape[-1], -1)
+
+
+def from_channel_first_2d(x2d: Array, shape: tuple,
+                          per_stack: bool = False) -> Array:
+    """Inverse of :func:`to_channel_first_2d` for a target ``shape``."""
+    if per_stack and len(shape) >= 3:
+        s = int(np.prod(shape[:-2]))
+        x3 = x2d.reshape(s, shape[-1], shape[-2])
+        return jnp.swapaxes(x3, -1, -2).reshape(shape)
+    x = x2d.reshape((shape[-1],) + tuple(shape[:-1]))
+    return jnp.moveaxis(x, 0, -1)

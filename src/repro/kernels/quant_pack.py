@@ -5,6 +5,14 @@ One VMEM pass per channel block: row min/max -> (scale, zp) -> RTN levels
 (reduce, elementwise, gather/shift) with one streaming kernel — the
 client-uplink hot loop is memory-bound, so the win is touching HBM once.
 
+The valid-column count is PER ROW: ``n_valid`` rides as a tiny (C, 1)
+int32 sidecar input (the SMEM-scalar-prefetch equivalent of the flat
+codec's row-length vector) and masks both the qparam min/max reduction
+and the packed tail of each row. A uniform tensor passes a constant
+vector; the FLAT-TREE codec (core/flat.py) packs EVERY leaf of a message
+as one ragged (C_total, N_max) buffer in a single launch, each row
+masked to its own leaf's true length.
+
 Tiling: grid over channel blocks; each step holds an (BC, N) fp32 tile
 plus its (BC, N/per) uint32 output in VMEM. BC=8 sublanes; N padded to a
 multiple of 128*per by the wrapper (ops.py) so lanes stay aligned.
@@ -15,30 +23,36 @@ import functools
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 from jax.experimental import pallas as pl
 
 Array = jax.Array
 
 
-def _quant_pack_kernel(x_ref, packed_ref, scale_ref, zp_ref, *,
-                       bits: int, n_valid: int):
+def _quant_pack_kernel(x_ref, nv_ref, packed_ref, scale_ref, zp_ref, *,
+                       bits: int):
     x = x_ref[...].astype(jnp.float32)                    # (bc, N)
     n = x.shape[1]
     qmax = (1 << bits) - 1
     per = 32 // bits
-    # mask the padded tail out of the min/max (pad value 0 is safe for
-    # the affine range because 0 is always included, but stay exact)
+    # mask each row's padded tail out of the min/max (pad value 0 is safe
+    # for the affine range because 0 is always included, but stay exact)
+    nv = nv_ref[...]                                      # (bc, 1) int32
     col = jax.lax.broadcasted_iota(jnp.int32, x.shape, 1)
-    valid = col < n_valid
+    valid = col < nv
     big = jnp.float32(3.4e38)
     xmin = jnp.minimum(jnp.min(jnp.where(valid, x, big), axis=1), 0.0)
     xmax = jnp.maximum(jnp.max(jnp.where(valid, x, -big), axis=1), 0.0)
     rng = xmax - xmin
-    scale = jnp.where(rng > 0, rng / qmax, 1.0)           # (bc,)
+    # multiply by the f32 reciprocal constant instead of dividing by
+    # qmax: XLA strength-reduces constant divisions inconsistently
+    # across programs, and the flat codec's jnp twin must reproduce the
+    # kernel's scale BIT-exactly
+    scale = jnp.where(rng > 0, rng * jnp.float32(1.0 / qmax), 1.0)
     zp = jnp.clip(jnp.round(-xmin / scale), 0, qmax)
     q = jnp.round(x / scale[:, None]) + zp[:, None]
-    # canonical zero padding past n_valid: packed words are byte-identical
-    # to the host/wire re-packing paths (messages.PackedLeaf)
+    # canonical zero padding past each row's n_valid: packed words are
+    # byte-identical to the host/wire re-packing paths (messages/flat)
     q = jnp.where(valid, jnp.clip(q, 0, qmax), 0)
     q = q.astype(jnp.uint32)
     # pack `per` levels into each uint32 word (little-endian)
@@ -50,12 +64,16 @@ def _quant_pack_kernel(x_ref, packed_ref, scale_ref, zp_ref, *,
     zp_ref[...] = zp[:, None]
 
 
-def quant_pack_pallas(x: Array, bits: int, *, n_valid: int | None = None,
+def quant_pack_pallas(x: Array, bits: int, *,
+                      n_valid: int | Array | None = None,
                       block_c: int = 8, interpret: bool = False):
     """x: (C, N) fp32, N % (32/bits * 128) == 0 (wrapper pads).
 
-    ``n_valid`` is the true (unpadded) column count — columns past it are
-    excluded from the min/max and packed as the zero-point level.
+    ``n_valid`` is the true (unpadded) column count — a scalar for a
+    uniform tensor or a (C,) vector for a ragged flat-tree buffer.
+    Columns past each row's count are excluded from the min/max and
+    packed as level 0 (rows with ``n_valid == 0`` emit all-zero words
+    with scale 1, zp 0 — the degenerate-channel convention).
 
     Returns (packed (C, N*bits/32) uint32, scale (C,), zp (C,))."""
     c, n = x.shape
@@ -63,13 +81,20 @@ def quant_pack_pallas(x: Array, bits: int, *, n_valid: int | None = None,
     assert c % block_c == 0 and n % per == 0
     if n_valid is None:
         n_valid = n
-    assert 0 < n_valid <= n
+    if isinstance(n_valid, (int, np.integer)):
+        assert 0 < n_valid <= n
+        nv = jnp.full((c, 1), n_valid, jnp.int32)
+    else:
+        nv = jnp.asarray(n_valid, jnp.int32).reshape(c, 1)
     nw = n // per
     grid = (c // block_c,)
     packed, scale, zp = pl.pallas_call(
-        functools.partial(_quant_pack_kernel, bits=bits, n_valid=n_valid),
+        functools.partial(_quant_pack_kernel, bits=bits),
         grid=grid,
-        in_specs=[pl.BlockSpec((block_c, n), lambda i: (i, 0))],
+        in_specs=[
+            pl.BlockSpec((block_c, n), lambda i: (i, 0)),
+            pl.BlockSpec((block_c, 1), lambda i: (i, 0)),
+        ],
         out_specs=[
             pl.BlockSpec((block_c, nw), lambda i: (i, 0)),
             pl.BlockSpec((block_c, 1), lambda i: (i, 0)),
@@ -81,5 +106,5 @@ def quant_pack_pallas(x: Array, bits: int, *, n_valid: int | None = None,
             jax.ShapeDtypeStruct((c, 1), jnp.float32),
         ],
         interpret=interpret,
-    )(x)
+    )(x, nv)
     return packed, scale[:, 0], zp[:, 0]

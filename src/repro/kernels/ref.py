@@ -20,7 +20,9 @@ def _qparams_rowwise(x: Array, bits: int):
     xmin = jnp.minimum(jnp.min(x, axis=1), 0.0)
     xmax = jnp.maximum(jnp.max(x, axis=1), 0.0)
     rng = xmax - xmin
-    scale = jnp.where(rng > 0, rng / qmax, 1.0)
+    # reciprocal multiply, matching the kernels bit-exactly (constant
+    # divisions strength-reduce inconsistently across XLA programs)
+    scale = jnp.where(rng > 0, rng * jnp.float32(1.0 / qmax), 1.0)
     zp = jnp.clip(jnp.round(-xmin / scale), 0, qmax)
     return scale, zp
 

@@ -1,0 +1,381 @@
+"""Flat-tree wire codec (core/flat.py) vs the per-leaf oracle.
+
+The acceptance contract of the fused codec:
+  * wire serialization is byte-IDENTICAL to the per-leaf PackedLeaf
+    codec (entry names, buffer contents, measured byte totals) — the
+    accounting ``message_wire_bytes`` does not move by a single byte;
+  * the flat payload holds the SAME words as every per-leaf kernel
+    launch would produce (bit-identity via ``as_tree``), including
+    per_stack and degenerate constant-channel leaves;
+  * decode and K-client aggregation match the per-leaf path to fp32
+    tolerance;
+  * DISPATCH/COMPILE BOUNDS: packing + aggregating the quickstart
+    ResNet-8 adapter tree is O(1) jitted programs on the flat path
+    (one fused kernel launch each), while the per-leaf oracle compiles
+    one program per leaf shape — counted via the jax.monitoring
+    backend-compile event;
+  * PackedLeaf.to_wire's vectorized host-side padding strip is
+    byte-identical to the old unpack-and-repack jnp path.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import aggregation, flat, messages, quant
+from repro.core.aggregation import FedAvgAggregator, FedBuffAggregator
+from repro.core.flocora import FLoCoRAConfig
+from repro.core.quant import QuantConfig
+from repro.kernels import ref as kref
+
+# -- backend-compile counter (the dispatch-count hook) ----------------------
+
+_COMPILES = [0]
+
+
+def _on_event(event, duration, **kw):
+    if event == "/jax/core/compile/backend_compile_duration":
+        _COMPILES[0] += 1
+
+
+jax.monitoring.register_event_duration_secs_listener(_on_event)
+
+
+class count_compiles:
+    """``with count_compiles() as c: ...; c.count`` — programs compiled
+    inside the block (eager ops and jit cache misses both count)."""
+
+    def __enter__(self):
+        self.start = _COMPILES[0]
+        return self
+
+    def __exit__(self, *a):
+        self.count = _COMPILES[0] - self.start
+
+    @property
+    def so_far(self):
+        return _COMPILES[0] - self.start
+
+
+def _tree(key, scale=1.0):
+    ks = jax.random.split(key, 5)
+    return {"a": jax.random.normal(ks[0], (6, 8)) * scale,
+            "b": jax.random.normal(ks[1], (4, 3, 5)) * scale,
+            "odd": jax.random.normal(ks[2], (7, 3)) * scale,
+            # degenerate channels: one constant, one all-zero
+            "const": jnp.concatenate([jnp.full((5, 2), 3.0),
+                                      jnp.zeros((5, 1))], axis=1),
+            "norm": jax.random.normal(ks[3], (7,)) * scale}
+
+
+def _block(x):
+    return jax.block_until_ready(jax.tree.leaves(
+        x, is_leaf=messages.is_wire_leaf)[0])
+
+
+# ---------------------------------------------------------------------------
+# byte identity with the per-leaf oracle
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("bits", [2, 4, 8])
+@pytest.mark.parametrize("per_stack", [False, True])
+def test_flat_wire_byte_identical_to_per_leaf(bits, per_stack):
+    """Same entry names, same buffer bytes, same measured totals — and
+    both equal the static accounting."""
+    t = _tree(jax.random.PRNGKey(bits))
+    cfg = QuantConfig(bits=bits, per_stack=per_stack)
+    per = messages.pack_message(t, cfg)
+    fl = messages.pack_message(t, cfg, flat=True)
+    assert isinstance(fl, flat.FlatPackedMessage)
+    wp, wf = messages.message_to_wire(per), messages.message_to_wire(fl)
+    assert [n for n, _ in wp] == [n for n, _ in wf]
+    for (name, bp), (_, bf) in zip(wp, wf):
+        assert set(bp) == set(bf), name
+        for k in bp:
+            np.testing.assert_array_equal(bp[k], bf[k]), (name, k)
+    assert messages.packed_wire_bytes(fl) == \
+        messages.packed_wire_bytes(per) == \
+        messages.message_wire_bytes(t, cfg)
+
+
+@pytest.mark.parametrize("bits", [2, 4, 8])
+def test_flat_payload_words_bit_identical(bits):
+    """as_tree re-exposes the per-leaf kernel payloads as slices of the
+    flat buffer — bit-for-bit, sidecars included."""
+    t = _tree(jax.random.PRNGKey(7))
+    cfg = QuantConfig(bits=bits)
+    per = messages.pack_message(t, cfg)
+    at = messages.pack_message(t, cfg, flat=True).as_tree()
+    for k in ("a", "b", "odd", "const"):
+        np.testing.assert_array_equal(np.asarray(at[k].payload),
+                                      np.asarray(per[k].payload))
+        np.testing.assert_array_equal(np.asarray(at[k].scale),
+                                      np.asarray(per[k].scale))
+        np.testing.assert_array_equal(np.asarray(at[k].zp),
+                                      np.asarray(per[k].zp))
+    np.testing.assert_array_equal(np.asarray(at["norm"]),
+                                  np.asarray(t["norm"]))
+
+
+@pytest.mark.parametrize("bits", [2, 4, 8])
+def test_flat_unpack_matches_per_leaf(bits):
+    t = _tree(jax.random.PRNGKey(1), 2.0)
+    cfg = QuantConfig(bits=bits)
+    up = messages.unpack_message(messages.pack_message(t, cfg))
+    uf = messages.unpack_message(messages.pack_message(t, cfg, flat=True))
+    for k in t:
+        np.testing.assert_allclose(np.asarray(up[k]), np.asarray(uf[k]),
+                                   atol=1e-6)
+        assert uf[k].dtype == t[k].dtype
+
+
+def test_to_wire_strip_matches_jnp_repack():
+    """Satellite: PackedLeaf.to_wire's host-side numpy word/bit strip is
+    byte-identical to the old unpack-everything-and-repack jnp path."""
+    for bits in (2, 4, 8):
+        t = {"a": jax.random.normal(jax.random.PRNGKey(0), (6, 37)),
+             "b": jax.random.normal(jax.random.PRNGKey(1), (3, 5, 9))}
+        msg = messages.pack_message(t, QuantConfig(bits=bits))
+        for leaf in (msg["a"], msg["b"]):
+            lv = kref.unpack_words(leaf.payload,
+                                   bits)[:, :leaf.n_per_channel]
+            old = np.asarray(quant.pack_levels(
+                lv.reshape(-1).astype(jnp.uint8), bits))
+            np.testing.assert_array_equal(old, leaf.to_wire()["payload"])
+
+
+def test_flat_serialization_roundtrip():
+    """to_wire -> from_wire rebuilds the flat buffer bit-exactly (zero
+    row tails included), through the v3 header."""
+    t = _tree(jax.random.PRNGKey(3))
+    fl = messages.pack_message(t, QuantConfig(bits=4), flat=True)
+    wire = messages.message_to_wire(fl)
+    hdr = messages.parse_wire_header(wire[0][1]["header"])
+    assert hdr["bits"] == 4 and hdr["density"] == 1.0
+    back = messages.message_from_wire(wire, fl)
+    np.testing.assert_array_equal(np.asarray(back.payload),
+                                  np.asarray(fl.payload))
+    np.testing.assert_array_equal(np.asarray(back.scale),
+                                  np.asarray(fl.scale))
+    np.testing.assert_array_equal(np.asarray(back.zp), np.asarray(fl.zp))
+    for a, b in zip(back.fp_leaves, fl.fp_leaves):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_unpack_decodes_nested_flat_messages():
+    """A container OF flat messages (not just a top-level one) decodes
+    leaf-wise through unpack_message."""
+    cfg = QuantConfig(bits=8)
+    t1, t2 = _tree(jax.random.PRNGKey(0)), _tree(jax.random.PRNGKey(1))
+    nested = {"clients": [messages.pack_message(t1, cfg, flat=True),
+                          messages.pack_message(t2, cfg, flat=True)]}
+    out = messages.unpack_message(nested)
+    for got, src in zip(out["clients"], (t1, t2)):
+        ref = messages.unpack_message(messages.pack_message(src, cfg))
+        for k in src:
+            np.testing.assert_allclose(np.asarray(got[k]),
+                                       np.asarray(ref[k]), atol=1e-6)
+
+
+def test_pack_flat_passthrough_without_quantizable_leaves():
+    t = {"n1": jnp.ones((5,)), "n2": jnp.zeros((3,))}
+    out = messages.pack_message(t, QuantConfig(bits=8), flat=True)
+    assert out is t          # nothing to pack: same passthrough as per-leaf
+
+
+# ---------------------------------------------------------------------------
+# aggregation
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("bits", [2, 4, 8])
+def test_flat_fedavg_matches_per_leaf(bits):
+    trees = [_tree(jax.random.PRNGKey(i)) for i in range(5)]
+    w = jnp.asarray([1.0, 2.0, 3.0, 1.5, 0.5])
+    cfg = QuantConfig(bits=bits)
+    ref = aggregation.fedavg_packed(
+        [messages.pack_message(t, cfg) for t in trees], w)
+    got = aggregation.fedavg_packed(
+        [messages.pack_message(t, cfg, flat=True) for t in trees], w)
+    for k in ref:
+        np.testing.assert_allclose(np.asarray(got[k]), np.asarray(ref[k]),
+                                   rtol=1e-5, atol=1e-6)
+        assert got[k].dtype == ref[k].dtype
+
+
+def test_mixed_flat_and_per_leaf_buffer():
+    """A buffer mixing flat and per-leaf messages (e.g. a FedBuff buffer
+    spanning a codec rollout) aggregates through as_tree, exactly."""
+    trees = [_tree(jax.random.PRNGKey(i)) for i in range(3)]
+    w = jnp.asarray([1.0, 2.0, 1.5])
+    cfg = QuantConfig(bits=4)
+    ref = aggregation.fedavg_packed(
+        [messages.pack_message(t, cfg) for t in trees], w)
+    mixed = [messages.pack_message(trees[0], cfg, flat=True),
+             messages.pack_message(trees[1], cfg),
+             messages.pack_message(trees[2], cfg, flat=True)]
+    got = aggregation.fedavg_packed(mixed, w)
+    for k in ref:
+        np.testing.assert_allclose(np.asarray(got[k]), np.asarray(ref[k]),
+                                   rtol=1e-5, atol=1e-6)
+
+
+def test_flat_fedbuff_add_flush():
+    """The async flush path: buffered flat messages aggregate in one
+    rank-bucketed fused pass."""
+    trees = [_tree(jax.random.PRNGKey(i)) for i in range(3)]
+    cfg = QuantConfig(bits=8)
+    agg = FedBuffAggregator(half_life=4.0)
+    for i, t in enumerate(trees):
+        agg.add(messages.pack_message(t, cfg, flat=True),
+                n_k=10.0, staleness=float(i))
+    got = agg.flush()
+    w = jnp.asarray([10.0 * 2.0 ** (-i / 4.0) for i in range(3)])
+    ref = aggregation.fedavg_packed(
+        [messages.pack_message(t, cfg) for t in trees], w)
+    for k in ref:
+        np.testing.assert_allclose(np.asarray(got[k]), np.asarray(ref[k]),
+                                   rtol=1e-5, atol=1e-6)
+
+
+def test_flat_hetero_rank_buckets():
+    """Mixed-rank flat messages bucket by (shape-walked) rank and equal
+    the per-leaf hetero aggregation."""
+    from repro.core import lora
+
+    def adapters(key, r):
+        ks = jax.random.split(key, 2)
+        return {"l": {"a": jax.random.normal(ks[0], (16, r)),
+                      "b": jax.random.normal(ks[1], (r, 12)) * 0.1}}
+
+    msgs_fp = [adapters(jax.random.PRNGKey(i), r)
+               for i, r in enumerate((4, 8, 4, 8))]
+    w = jnp.asarray([1.0, 2.0, 1.5, 0.5])
+    cfg = QuantConfig(bits=8)
+    per = [messages.pack_message(t, cfg) for t in msgs_fp]
+    fl = [messages.pack_message(t, cfg, flat=True) for t in msgs_fp]
+    assert [messages.message_rank(m) for m in fl] == [4, 8, 4, 8]
+    ref = FedAvgAggregator(cfg, r_target=8).aggregate(per, w)
+    got = FedAvgAggregator(cfg, r_target=8).aggregate(fl, w)
+    for a, b in zip(jax.tree.leaves(ref), jax.tree.leaves(got)):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                                   rtol=1e-5, atol=1e-6)
+
+
+def test_flat_ef_uplink_preserves_dtype():
+    from repro.core import flocora
+    cfg = FLoCoRAConfig(quant_bits=8, error_feedback=True)
+    x = {"w": (jax.random.normal(jax.random.PRNGKey(0), (4, 64))
+               ).astype(jnp.bfloat16),
+         "norm": jnp.ones((5,), jnp.bfloat16)}
+    msg, _ = flocora.client_uplink(x, cfg, None)
+    assert isinstance(msg, flat.FlatPackedMessage)
+    out = messages.unpack_message(msg)
+    assert out["w"].dtype == jnp.bfloat16
+    assert out["norm"].dtype == jnp.bfloat16
+    agg = FedAvgAggregator(cfg.qcfg).aggregate([msg, msg], jnp.ones(2))
+    assert agg["w"].dtype == jnp.bfloat16
+
+
+# ---------------------------------------------------------------------------
+# dispatch/compile bounds (the acceptance measurement)
+# ---------------------------------------------------------------------------
+
+def _quickstart_adapters(rank=6):
+    """The quickstart model: frozen ResNet-8 + LoRA adapters. Rank 6 is
+    unused elsewhere in the suite, so this tree's shape signature is
+    guaranteed cold in the process-wide compile cache."""
+    from repro.core.lora import LoRAConfig
+    from repro.models.resnet import ResNetConfig, init as rinit
+    cfg = ResNetConfig(arch="resnet8",
+                       lora=LoRAConfig(rank=rank, alpha=16.0 * rank))
+    return rinit(jax.random.PRNGKey(0), cfg)["train"]
+
+
+def test_flat_codec_dispatch_and_compile_bounds():
+    """ACCEPTANCE: over the quickstart ResNet-8 adapter tree the flat
+    path packs and aggregates in O(1) jitted programs (== fused kernel
+    launches: each program contains exactly one pallas_call by
+    construction, so <= 2 launches per message is implied by <= 2
+    programs), while the per-leaf oracle compiles one program per leaf
+    shape. Steady state recompiles nothing."""
+    train = _quickstart_adapters()
+    qcfg = QuantConfig(bits=4)
+    n_shapes = len({tuple(x.shape) for x in jax.tree.leaves(train)
+                    if x.ndim >= 2})
+    assert n_shapes >= 5            # the bound below is meaningful
+
+    with count_compiles() as c_per:
+        _block(messages.pack_message(train, qcfg))
+    with count_compiles() as c_flat:
+        _block(messages.pack_message(train, qcfg, flat=True))
+    assert c_flat.count <= 2, c_flat.count
+    assert c_per.count >= n_shapes, (c_per.count, n_shapes)
+
+    k = 4
+    trees = [jax.tree.map(lambda x, i=i: x + 0.01 * i, train)
+             for i in range(k)]
+    w = jnp.ones((k,))
+    msgs_p = [messages.pack_message(t, qcfg) for t in trees]
+    msgs_f = [messages.pack_message(t, qcfg, flat=True) for t in trees]
+    with count_compiles() as a_per:
+        _block(aggregation.fedavg_packed(msgs_p, w))
+    with count_compiles() as a_flat:
+        _block(aggregation.fedavg_packed(msgs_f, w))
+    assert a_flat.count <= 2, a_flat.count
+    assert a_per.count >= n_shapes, (a_per.count, n_shapes)
+
+    # steady state: the flat codec re-dispatches the SAME two programs
+    with count_compiles() as steady:
+        _block(messages.pack_message(train, qcfg, flat=True))
+        _block(aggregation.fedavg_packed(msgs_f, w))
+    assert steady.count == 0, steady.count
+
+    # decode is one fused program too
+    with count_compiles() as c_up:
+        _block(messages.unpack_message(msgs_f[0]))
+    assert c_up.count <= 2, c_up.count
+
+
+@pytest.mark.parametrize("bits", [2, 4, 8])
+def test_ragged_row_kernels_match_jnp_twins(bits):
+    """The TPU pallas bodies (ragged quant_pack, K-resident flat
+    dequant_agg) are bit-identical to the jnp twins the CPU path lowers
+    to — exercised in interpret mode on small shapes."""
+    from repro.kernels import ops as kops
+    from repro.kernels.quant_pack import quant_pack_pallas
+    from repro.kernels.dequant_agg import dequant_agg_rows_pallas
+    lane = (32 // bits) * 128
+    c, n, k = 16, 2 * lane, 3
+    rng = np.random.default_rng(bits)
+    x = jnp.asarray(rng.normal(size=(c, n)).astype(np.float32))
+    nv = jnp.asarray(rng.choice([1, 7, lane, n], size=c).astype(np.int32))
+    pk, sk, zk = quant_pack_pallas(x, bits, n_valid=nv, block_c=8,
+                                   interpret=True)
+    pj, sj, zj = kops._quant_pack_rows_jnp(x, nv, bits)
+    np.testing.assert_array_equal(np.asarray(pk), np.asarray(pj))
+    np.testing.assert_array_equal(np.asarray(sk), np.asarray(sj))
+    np.testing.assert_array_equal(np.asarray(zk), np.asarray(zj))
+
+    P = jnp.stack([pk] * k)
+    S = jnp.stack([sk] * k) * jnp.asarray([1.0, 0.5, 2.0])[:, None]
+    Z = jnp.stack([zk] * k)
+    w = jnp.asarray([0.2, 0.5, 0.3])
+    got = dequant_agg_rows_pallas(P, S, Z, w, nv, bits, block_c=8,
+                                  interpret=True)
+    ref_out = np.asarray(kops.dequant_agg_rows(P, S, Z, w, nv, bits))
+    np.testing.assert_allclose(np.asarray(got), ref_out, rtol=1e-6,
+                               atol=1e-6)
+    # tails past each row's n_valid are exact zeros in both
+    for row_i in range(c):
+        assert not np.any(ref_out[row_i, int(nv[row_i]):])
+
+
+def test_flat_layout_cached_per_signature():
+    t1 = _tree(jax.random.PRNGKey(0))
+    t2 = _tree(jax.random.PRNGKey(1))
+    l1 = flat.layout_for(t1, 4, False)
+    l2 = flat.layout_for(t2, 4, False)
+    assert l1 is l2                    # same signature -> same object
+    assert flat.layout_for(t1, 8, False) is not l1   # bits key
+    nv = l1.n_valid_vec()
+    assert nv.shape == (l1.c_total,) and nv.min() > 0
