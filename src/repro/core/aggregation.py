@@ -234,9 +234,17 @@ def fedbuff_add(state: FedBuffState, update: Any, n_k: Array,
 
 
 def fedbuff_flush(state: FedBuffState, like: Any) -> tuple[Any, FedBuffState]:
-    """Produce the aggregated tree and reset the buffer."""
+    """Produce the aggregated tree and reset the buffer.
+
+    Raises on zero accumulated weight: the old ``1e-8`` floor silently
+    returned a near-zero garbage tree scaled by 1e8 — an empty (or
+    staleness-discounted-to-nothing) buffer is a caller bug, not a
+    degenerate mean. Eager-only by design (the check reads the weight)."""
+    if float(state.weight) <= 0.0:
+        raise ValueError("FedBuff flush with zero accumulated weight "
+                         f"(count={int(state.count)})")
     agg = jax.tree.map(
-        lambda b, x: (b / jnp.maximum(state.weight, 1e-8)).astype(x.dtype),
+        lambda b, x: (b / state.weight).astype(x.dtype),
         state.buffer, like)
     return agg, fedbuff_init(like)
 
@@ -449,6 +457,82 @@ class SVDRecombinationAggregator(FedAvgAggregator):
         return lora.pad_adapter(served, lora.adapter_rank(base_pair))
 
 
+@dataclasses.dataclass
+class StreamingFlatAccumulator:
+    """O(1)-memory streaming aggregation of flat wire messages.
+
+    Instead of buffering K pending messages and reducing at flush, each
+    arrived :class:`~repro.core.flat.FlatPackedMessage` folds into a
+    running fp32 sum at ARRIVAL time — one fused K=1 ``dequant_agg_rows``
+    pass over the ``(C_total, N_max)`` accumulator
+    (``flat._fold_flat_impl``) — and the flush is an O(message)
+    normalize (``flat._flat_mean_from_sum_impl``), independent of how
+    many clients folded. Server memory: ONE accumulator per layout,
+    never the K-message buffer. Weight/count ride on the host so the
+    fold program never retraces (weak-typed scalar weight).
+    """
+    layout: Any               # flat.TreeLayout (one accumulator each)
+    acc: Array                # (C_total, N_max) fp32 running sum
+    fp_acc: tuple             # fp32 running sums of fp passthrough leaves
+    weight: float = 0.0       # accumulated (discounted) weight
+    count: int = 0            # messages folded since the last reset
+
+    @classmethod
+    def for_layout(cls, layout: Any) -> "StreamingFlatAccumulator":
+        acc = jnp.zeros((layout.c_total, layout.n_max), jnp.float32)
+        fp = tuple(jnp.zeros(s.shape, jnp.float32)
+                   for s in layout.leaves if not s.quantized)
+        return cls(layout, acc, fp)
+
+    def fold(self, msg: FlatPackedMessage, w: float) -> None:
+        if msg.layout != self.layout:
+            raise ValueError("flat message layout does not match the "
+                             "streaming accumulator's")
+        self.acc, self.fp_acc = flatcodec._fold_flat_impl(
+            self.acc, self.fp_acc, msg.payload, msg.scale, msg.zp,
+            msg.fp_leaves, float(w), self.layout)
+        self.weight += float(w)
+        self.count += 1
+
+    def mean(self) -> Any:
+        """The aggregated fp tree (original structure/dtypes)."""
+        if self.count == 0:
+            raise ValueError("streaming flush with an empty accumulator")
+        if self.weight <= 0.0:
+            raise ValueError("streaming flush with zero accumulated "
+                             f"weight (count={self.count})")
+        return flatcodec._flat_mean_from_sum_impl(
+            self.acc, self.fp_acc, 1.0 / self.weight, self.layout)
+
+    def reset(self) -> None:
+        self.acc = jnp.zeros_like(self.acc)
+        self.fp_acc = tuple(jnp.zeros_like(x) for x in self.fp_acc)
+        self.weight = 0.0
+        self.count = 0
+
+    def shape_tree(self) -> Any:
+        """Shape/dtype view with the original tree structure (rank
+        detection without touching the accumulator)."""
+        return jax.tree_util.tree_unflatten(
+            self.layout.treedef,
+            [jax.ShapeDtypeStruct(s.shape, s.dtype)
+             for s in self.layout.leaves])
+
+    # -- checkpointable state (host arrays; layout is rebuilt by caller) ----
+    def state(self) -> dict:
+        return {"acc": np.asarray(self.acc),
+                "fp_acc": [np.asarray(x) for x in self.fp_acc],
+                "weight": float(self.weight), "count": int(self.count)}
+
+    @classmethod
+    def from_state(cls, layout: Any,
+                   state: dict) -> "StreamingFlatAccumulator":
+        return cls(layout, jnp.asarray(state["acc"], jnp.float32),
+                   tuple(jnp.asarray(x, jnp.float32)
+                         for x in state["fp_acc"]),
+                   float(state["weight"]), int(state["count"]))
+
+
 FEDBUFF_HALF_LIFE = 4.0   # fallback when no engine config threads one
 
 
@@ -472,11 +556,22 @@ class FedBuffAggregator:
         interface driven by ``fl/async_engine.py``: packed wire messages
         buffer with their discounted weights and one flush performs the
         buffered packed sum in a single rank-bucketed fused pass.
+
+    With ``streaming=True`` flat wire messages never buffer: each
+    ``add`` folds the arrival into a :class:`StreamingFlatAccumulator`
+    (one per layout — layouts double as rank buckets) and ``flush``
+    normalizes the running sums in O(message) — flush cost and server
+    memory become independent of ``buffer_size``. Non-flat messages
+    (sparse uplinks, raw fp trees) still buffer in ``pending``; a mixed
+    flush combines stream means and pending-bucket means by weight-mass
+    fraction, exactly mirroring ``fedavg_hetero``'s recombination.
     """
     half_life: Optional[float] = None
     rank_staleness: bool = False   # sync rounds: discount late arrivals
     r_target: Optional[int] = None  # zero-pad target (engines pin this)
     pending: list = dataclasses.field(default_factory=list)
+    streaming: bool = False        # fold flat arrivals at add time
+    streams: dict = dataclasses.field(default_factory=dict)
 
     def resolved_half_life(self) -> float:
         return FEDBUFF_HALF_LIFE if self.half_life is None \
@@ -514,21 +609,79 @@ class FedBuffAggregator:
         return self._combine(msgs, w)
 
     # -- async buffered interface (fl/async_engine.py) ----------------------
+    @property
+    def buffered(self) -> int:
+        """Arrivals absorbed since the last flush (pending + streamed)."""
+        return len(self.pending) + sum(s.count
+                                       for s in self.streams.values())
+
+    @property
+    def buffered_weight(self) -> float:
+        """Total discounted weight absorbed since the last flush."""
+        return (sum(wt for _, wt in self.pending)
+                + sum(s.weight for s in self.streams.values()))
+
     def add(self, msg: Any, n_k: float, staleness: float) -> int:
-        """Buffer one arrived (packed or fp) message with its
-        staleness-discounted weight; returns the buffer fill count."""
-        self.pending.append((msg, self.discounted_weight(n_k, staleness)))
-        return len(self.pending)
+        """Absorb one arrived (packed or fp) message with its
+        staleness-discounted weight; returns the buffer fill count.
+        Streaming mode folds flat messages immediately (O(1) server
+        memory); everything else buffers for the batched flush."""
+        w = self.discounted_weight(n_k, staleness)
+        if self.streaming and is_flat_message(msg):
+            st = self.streams.get(msg.layout)
+            if st is None:
+                st = StreamingFlatAccumulator.for_layout(msg.layout)
+                self.streams[msg.layout] = st
+            st.fold(msg, w)
+        else:
+            self.pending.append((msg, w))
+        return self.buffered
 
     def flush(self) -> Any:
-        """Aggregate and clear the buffer: one rank-bucketed fused pass
-        over every buffered packed message."""
-        if not self.pending:
+        """Aggregate and clear the buffer. Pending messages reduce in
+        one rank-bucketed fused pass; streaming accumulators normalize
+        in O(message). Mixed parts recombine like ``fedavg_hetero``:
+        bucket means zero-pad to the target rank and combine with their
+        weight-mass fractions."""
+        if self.buffered == 0:
             raise ValueError("FedBuff flush with an empty buffer")
+        parts: list[tuple[int, float, Any]] = []   # (rank, mass, mean)
+        for st in self.streams.values():
+            if st.count == 0:
+                continue
+            r = lora.tree_max_rank(st.shape_tree())
+            parts.append((0 if r is None else int(r), st.weight,
+                          st.mean()))
+            st.reset()
         msgs = [m for m, _ in self.pending]
-        w = np.asarray([wt for _, wt in self.pending], np.float32)
+        wts = [wt for _, wt in self.pending]
         self.pending = []
-        return self._combine(msgs, w)
+        for r, idxs in bucket_by_rank(msgs).items():
+            bmsgs = [msgs[i] for i in idxs]
+            bw = jnp.asarray([wts[i] for i in idxs], jnp.float32)
+            if any(message_is_packed(m) for m in bmsgs):
+                mean_b = fedavg_packed(bmsgs, bw)
+            else:
+                mean_b = fedavg(stack_trees(bmsgs), bw)
+            parts.append((r, float(sum(wts[i] for i in idxs)), mean_b))
+        total = sum(mass for _, mass, _ in parts)
+        if total <= 0.0:
+            raise ValueError("FedBuff flush with zero accumulated "
+                             f"weight ({self.buffered} buffered)")
+        ranks = {r for r, _, _ in parts if r}
+        target = max(self.r_target or 0, max(ranks)) if ranks else 0
+        means = [lora.resize_tree_rank(m, target, method="slice")
+                 if r and r != target else m for r, _, m in parts]
+        if len(means) == 1:
+            return means[0]
+        fracs = [mass / total for _, mass, _ in parts]
+
+        def combine(*leaves):
+            acc = sum(f * l.astype(jnp.float32)
+                      for f, l in zip(fracs, leaves))
+            return acc.astype(leaves[0].dtype)
+
+        return jax.tree.map(combine, *means)
 
 
 @dataclasses.dataclass

@@ -57,11 +57,21 @@ def strip_row_padding(words: np.ndarray, bits: int,
     the first ``n_valid`` levels of every row packed contiguously
     little-endian, ``ceil(C * n_valid * bits / 8)`` uint8 bytes.
 
-    Pure vectorized numpy (word -> bit -> byte views); replaces the old
-    unpack-to-levels-and-repack jnp round-trip through the device."""
-    w = np.ascontiguousarray(np.asarray(words, dtype="<u4"))
+    Pure vectorized numpy. The input may be WIDER than the row needs
+    (a flat-buffer slice carries the layout-wide ``Nw_max``); only the
+    compact word width is ever touched, and when each row's payload is
+    byte-aligned (``n_valid * bits % 8 == 0`` — every bits=8 row and
+    most 2/4-bit rows) the wire bytes are a direct byte view of the
+    words, no bit unpack/repack at all."""
+    nbits = n_valid * bits
+    nww = (nbits + 31) // 32
+    w = np.ascontiguousarray(np.asarray(words, dtype="<u4")[:, :nww])
     u8 = w.view(np.uint8).reshape(w.shape[0], -1)
-    b = np.unpackbits(u8, axis=1, bitorder="little")[:, : n_valid * bits]
+    if nbits % 8 == 0:
+        # rows start on byte boundaries: the kernel's zero tail past
+        # n_valid levels means the first nbits/8 bytes ARE the wire form
+        return u8[:, : nbits // 8].reshape(-1).copy()
+    b = np.unpackbits(u8, axis=1, bitorder="little")[:, :nbits]
     return np.packbits(b.reshape(-1), bitorder="little")
 
 
@@ -69,10 +79,17 @@ def rows_from_wire(payload_u8: np.ndarray, bits: int, channels: int,
                    n_valid: int, nw: int) -> np.ndarray:
     """Inverse of :func:`strip_row_padding`: wire bytes -> (channels, nw)
     uint32 kernel-layout words with the canonical zero tail."""
+    nbits = n_valid * bits
+    if nbits % 8 == 0:
+        u8 = np.zeros((channels, nw * 4), np.uint8)
+        u8[:, : nbits // 8] = np.asarray(
+            payload_u8, np.uint8)[: channels * (nbits // 8)].reshape(
+                channels, nbits // 8)
+        return u8.view("<u4").reshape(channels, nw)
     b = np.unpackbits(np.asarray(payload_u8, np.uint8),
-                      bitorder="little")[: channels * n_valid * bits]
+                      bitorder="little")[: channels * nbits]
     full = np.zeros((channels, nw * 32), np.uint8)
-    full[:, : n_valid * bits] = b.reshape(channels, n_valid * bits)
+    full[:, :nbits] = b.reshape(channels, nbits)
     by = np.packbits(full, axis=1, bitorder="little")
     return np.ascontiguousarray(by).view("<u4").reshape(channels, nw)
 
@@ -245,44 +262,144 @@ def _unpack_flat_impl(payload, scale, zp, fp_leaves: tuple,
     return jax.tree_util.tree_unflatten(layout.treedef, out)
 
 
+def _chunk_k(layout: TreeLayout, budget_bytes: int = 8 << 20) -> int:
+    """Client-chunk size for the off-TPU aggregate: the largest pow2
+    count of clients whose compact fp32 unpack/contribution
+    intermediates (~3 buffers per leaf) fit the working-set budget —
+    the CPU analogue of the kernel's ``pick_block_k`` VMEM tiling, so
+    fleet cohorts stream through a bounded footprint instead of
+    materializing the K-client fp32 stack."""
+    per_client = 12 * sum(s.rows * s.n_valid
+                          for s in layout.leaves if s.quantized)
+    bk = max(1, budget_bytes // max(per_client, 1))
+    return int(min(1 << (int(bk).bit_length() - 1), 256))
+
+
+def _deq_compact(Pl, S, Z, wf, spec: LeafSpec, bits: int):
+    """Weighted reduce of one leaf's already-compact ``(K, rows, nw)``
+    word stack -> the leaf's (rows, n_valid) 2D mean contribution.
+    (S, Z) stay full-width ``(K, C_total)``; the leaf's row window is
+    sliced here."""
+    r0, r1 = spec.row_start, spec.row_start + spec.rows
+    lv = kref.unpack_words(Pl, bits)[..., : spec.n_valid].astype(jnp.float32)
+    deq = (lv - Z[:, r0:r1, None]) * S[:, r0:r1, None]
+    return jnp.einsum("k,kcn->cn", wf, deq)
+
+
 @partial(jax.jit, static_argnames=("layout",))
 def _fedavg_flat_impl(payloads: tuple, scales: tuple, zps: tuple,
                       fps: tuple, weights, layout: TreeLayout):
     w = weights / jnp.sum(weights)
     wf = w.astype(jnp.float32)
     interp = kops._interpret()
+    qspecs = tuple(s for s in layout.leaves if s.quantized)
     if not interp:
         agg = kops.dequant_agg_rows(jnp.stack(payloads),
                                     jnp.stack(scales), jnp.stack(zps),
                                     wf, jnp.asarray(layout.n_valid_vec()),
                                     layout.bits)
+        x2ds = {s.path: agg[s.row_start: s.row_start + s.rows,
+                            : s.n_valid] for s in qspecs}
     else:
-        # off-TPU: same single program, but each leaf's row/word slice
-        # unpacks + reduces at its compact width (see _pack_flat_impl)
-        P = jnp.stack(payloads)
+        # off-TPU: same single program; each leaf's row/word slice
+        # unpacks + reduces at its compact width (see _pack_flat_impl),
+        # K-chunked through one scan so a fleet-scale cohort streams a
+        # bounded working set — the jnp twin of the kernel's K tiling.
+        # Each client's payload is sliced to the leaf's compact row/word
+        # window BEFORE the K-stack: the concat then moves only real
+        # wire bytes, not the (C_total, Nw_max) padding (~60x on LoRA
+        # layouts, where most rows are rank-width), which keeps the
+        # cohort aggregate linear in K on memcpy-bound hosts.
+        k = len(payloads)
+        bk = _chunk_k(layout)
+        per = 32 // layout.bits
         S = jnp.stack(scales)
         Z = jnp.stack(zps)
-        per = 32 // layout.bits
+
+        def leaf_stack(s):
+            r0, r1 = s.row_start, s.row_start + s.rows
+            nw = (s.n_valid + per - 1) // per
+            return jnp.stack([p[r0:r1, :nw] for p in payloads])
+
+        Pls = {s.path: leaf_stack(s) for s in qspecs}
+        if k <= bk:
+            x2ds = {s.path: _deq_compact(Pls[s.path], S, Z, wf, s,
+                                         layout.bits)
+                    for s in qspecs}
+        else:
+            nt = -(-k // bk)
+            pad = nt * bk - k
+
+            def padk(x):         # zero weight => exact-zero contribution
+                return jnp.pad(x, ((0, pad),) + ((0, 0),) * (x.ndim - 1))
+
+            Plc = tuple(
+                padk(Pls[s.path]).reshape(nt, bk, *Pls[s.path].shape[1:])
+                for s in qspecs)
+            Sc = padk(S).reshape(nt, bk, *S.shape[1:])
+            Zc = padk(Z).reshape(nt, bk, *Z.shape[1:])
+            wc = padk(wf).reshape(nt, bk)
+
+            def fold(accs, xs):
+                pls, s_, z, wt = xs
+                return tuple(
+                    a + _deq_compact(pl, s_, z, wt, spec, layout.bits)
+                    for a, pl, spec in zip(accs, pls, qspecs)), None
+
+            init = tuple(jnp.zeros((s.rows, s.n_valid), jnp.float32)
+                         for s in qspecs)
+            accs, _ = jax.lax.scan(fold, init, (Plc, Sc, Zc, wc))
+            x2ds = {s.path: a for s, a in zip(qspecs, accs)}
     out, fpi = [], 0
     for spec in layout.leaves:
         if spec.quantized:
-            if interp:
-                r0, r1 = spec.row_start, spec.row_start + spec.rows
-                nw = (spec.n_valid + per - 1) // per
-                lv = kref.unpack_words(
-                    P[:, r0:r1, :nw],
-                    layout.bits)[..., : spec.n_valid].astype(jnp.float32)
-                deq = (lv - Z[:, r0:r1, None]) * S[:, r0:r1, None]
-                x2d = jnp.einsum("k,kcn->cn", wf, deq)
-            else:
-                x2d = agg[spec.row_start: spec.row_start + spec.rows,
-                          : spec.n_valid]
             out.append(kops.from_channel_first_2d(
-                x2d, spec.shape, layout.per_stack).astype(spec.dtype))
+                x2ds[spec.path], spec.shape,
+                layout.per_stack).astype(spec.dtype))
         else:
             x = jnp.stack([f[fpi].astype(jnp.float32) for f in fps])
             wr = w.reshape((-1,) + (1,) * (x.ndim - 1)).astype(jnp.float32)
             out.append(jnp.sum(x * wr, axis=0).astype(spec.dtype))
+            fpi += 1
+    return jax.tree_util.tree_unflatten(layout.treedef, out)
+
+
+# ---------------------------------------------------------------------------
+# Streaming fold (O(1)-memory FedBuff arrivals) + sharded cohort reduce
+# ---------------------------------------------------------------------------
+
+@partial(jax.jit, static_argnames=("layout",))
+def _fold_flat_impl(acc, fp_accs: tuple, payload, scale, zp,
+                    fp_leaves: tuple, w, layout: TreeLayout):
+    """Fold ONE client's flat message into the running fp32 sum: the
+    ``(C_total, N_max)`` accumulator gains ``w * dequant(payload)`` in a
+    single fused pass (K=1 ``dequant_agg_rows``), fp passthrough leaves
+    gain ``w * leaf``. ``w`` stays a weak python float so steady-state
+    folds never retrace — one compiled program per layout."""
+    wf = jnp.asarray(w, jnp.float32)
+    contrib = kops.dequant_agg_rows(
+        payload[None], scale[None], zp[None], wf[None],
+        jnp.asarray(layout.n_valid_vec()), layout.bits)
+    fp_out = tuple(a + wf * x.astype(jnp.float32)
+                   for a, x in zip(fp_accs, fp_leaves))
+    return acc + contrib, fp_out
+
+
+@partial(jax.jit, static_argnames=("layout",))
+def _flat_mean_from_sum_impl(acc, fp_accs: tuple, inv_w,
+                             layout: TreeLayout):
+    """Running weighted sum -> the aggregated fp tree: slice each leaf's
+    rows off the flat accumulator, scale by ``1/total_weight``, restore
+    shape/dtype. O(message), independent of how many clients folded."""
+    out, fpi = [], 0
+    for spec in layout.leaves:
+        if spec.quantized:
+            r0, r1 = spec.row_start, spec.row_start + spec.rows
+            x2d = acc[r0:r1, : spec.n_valid] * inv_w
+            out.append(kops.from_channel_first_2d(
+                x2d, spec.shape, layout.per_stack).astype(spec.dtype))
+        else:
+            out.append((fp_accs[fpi] * inv_w).astype(spec.dtype))
             fpi += 1
     return jax.tree_util.tree_unflatten(layout.treedef, out)
 
@@ -455,3 +572,27 @@ def fedavg_packed_flat(msgs: list, weights) -> Any:
         tuple(m.payload for m in msgs), tuple(m.scale for m in msgs),
         tuple(m.zp for m in msgs), tuple(m.fp_leaves for m in msgs),
         jnp.asarray(weights, jnp.float32), lo)
+
+
+def fedavg_packed_flat_sharded(msgs: list, weights, mesh,
+                               axis: str = kops.CLIENT_AXIS) -> Any:
+    """:func:`fedavg_packed_flat` with the client dim sharded over
+    ``axis`` of ``mesh`` (``launch.mesh.make_client_mesh``): each device
+    reduces its local client shard through the K-tiled kernel and ONE
+    psum combines the partials, so cohort-reduction bandwidth scales
+    with the device count. Numerically a weighted sum in a different
+    association order — fp32-tolerance equal to the single-device path."""
+    lo = msgs[0].layout
+    w = jnp.asarray(weights, jnp.float32)
+    wn = w / jnp.sum(w)
+    agg = kops.dequant_agg_rows_sharded(
+        jnp.stack([m.payload for m in msgs]),
+        jnp.stack([m.scale for m in msgs]),
+        jnp.stack([m.zp for m in msgs]),
+        wn, jnp.asarray(lo.n_valid_vec()), lo.bits, mesh, axis=axis)
+    n_fp = len(msgs[0].fp_leaves)
+    fp_sums = tuple(
+        jnp.tensordot(wn, jnp.stack(
+            [m.fp_leaves[i].astype(jnp.float32) for m in msgs]), axes=1)
+        for i in range(n_fp))
+    return _flat_mean_from_sum_impl(agg, fp_sums, 1.0, lo)

@@ -91,6 +91,8 @@ class AsyncConfig:
     total_arrivals: int = 200    # stop after this many buffered arrivals
     concurrency: int = 8         # clients kept in flight
     buffer_size: int = 10        # FedBuff K: flush every K arrivals
+    streaming_agg: bool = False  # fold flat arrivals at add time (O(1)
+    #                              flush cost/memory in buffer_size)
     half_life: float = 4.0       # staleness discount half-life (versions)
     server_lr: float = 1.0       # scale on the applied mean flush delta
     microbatch_window: float = 0.0  # virtual-seconds arrival grouping
@@ -197,7 +199,10 @@ class AsyncFLServer:
             raise ValueError(
                 f"async aggregator r_target={aggregator.r_target} must "
                 f"match the server rank {fcfg.rank}")
-        fields: dict[str, Any] = {"pending": list(aggregator.pending)}
+        fields: dict[str, Any] = {"pending": list(aggregator.pending),
+                                  "streams": dict(aggregator.streams)}
+        if acfg.streaming_agg:
+            fields["streaming"] = True
         if aggregator.half_life is None:
             fields["half_life"] = acfg.half_life    # config-threaded
         if aggregator.r_target is None:
@@ -223,6 +228,11 @@ class AsyncFLServer:
         self._up_cum = 0
         self._flush_stats: list[tuple[float, int, int]] = []
         self._flush_starts: list[Any] = []   # broadcast refs, || pending
+        # streaming mode: running discounted-weight sum of the resized
+        # start trees (mean_start's numerator), O(1) in buffer_size —
+        # the streaming twin of _flush_starts
+        self._start_sum: Any = None
+        self._start_weight: float = 0.0
         self.initial_model_bytes = tree_bytes(self.frozen)
         self.program_keys: set[tuple[int, int]] = set()  # (rank, padK)
         self.ckpt = CheckpointManager(acfg.checkpoint_dir) \
@@ -352,19 +362,47 @@ class AsyncFLServer:
             self.fcfg.uplink_density(rec.version)) or 0
         self.n_arrived += 1
         self.aggregator.add(rec.msg, rec.n_k, staleness)
-        self._flush_starts.append(rec.start)
+        if self.acfg.streaming_agg:
+            self._fold_start(
+                rec.start,
+                self.aggregator.discounted_weight(rec.n_k, staleness))
+        else:
+            self._flush_starts.append(rec.start)
         self._flush_stats.append((rec.loss, staleness, rec.rank))
         out = None
-        if len(self.aggregator.pending) >= self.acfg.buffer_size:
+        if self.aggregator.buffered >= self.acfg.buffer_size:
             out = self._flush()
         if self.n_dispatched < self.acfg.total_arrivals:
             self._dispatch_one()       # keep the pipeline full
         return out
 
-    def _apply_delta(self, mean_u: Any, weights: list[float]) -> None:
+    def _fold_start(self, start: Any, w: float) -> None:
+        """Streaming twin of ``_flush_starts``: fold one arrival's
+        broadcast into the running discounted-weight start sum, so
+        mean_start at flush is an O(1) normalize like the uplink side."""
+        target = self.aggregator.r_target or self.fcfg.rank
+        s = lora.resize_tree_rank(start, target)
+        if self._start_sum is None:
+            self._start_sum = jax.tree.map(
+                lambda x: w * x.astype(jnp.float32), s)
+        else:
+            self._start_sum = jax.tree.map(
+                lambda a, x: a + w * x.astype(jnp.float32),
+                self._start_sum, s)
+        self._start_weight += float(w)
+
+    def _apply_mean(self, mean_u: Any, mean_start: Any) -> None:
         """g <- g + server_lr * (mean_u - mean_start): the buffered
         updates contribute their LOCAL training progress relative to the
         broadcasts they each started from (see module docstring)."""
+        lr = self.acfg.server_lr
+        self.global_train = jax.tree.map(
+            lambda g, mu, ms: (g.astype(jnp.float32)
+                               + lr * (mu.astype(jnp.float32) - ms)
+                               ).astype(g.dtype),
+            self.global_train, mean_u, mean_start)
+
+    def _apply_delta(self, mean_u: Any, weights: list[float]) -> None:
         w = np.asarray(weights, np.float32)
         wn = w / max(float(w.sum()), 1e-8)
         target = self.aggregator.r_target or self.fcfg.rank
@@ -373,12 +411,18 @@ class AsyncFLServer:
         mean_start = jax.tree.map(
             lambda *xs: sum(float(a) * x.astype(jnp.float32)
                             for a, x in zip(wn, xs)), *starts)
-        lr = self.acfg.server_lr
-        self.global_train = jax.tree.map(
-            lambda g, mu, ms: (g.astype(jnp.float32)
-                               + lr * (mu.astype(jnp.float32) - ms)
-                               ).astype(g.dtype),
-            self.global_train, mean_u, mean_start)
+        self._apply_mean(mean_u, mean_start)
+
+    def _apply_delta_streaming(self, mean_u: Any) -> None:
+        """O(1) flush apply: mean_start = start_sum / start_weight
+        (mirrors the aggregator's zero-weight raise)."""
+        if self._start_weight <= 0.0:
+            raise ValueError("streaming flush with zero accumulated "
+                             "start weight")
+        inv = 1.0 / self._start_weight
+        mean_start = jax.tree.map(lambda a: a * inv, self._start_sum)
+        self._start_sum, self._start_weight = None, 0.0
+        self._apply_mean(mean_u, mean_start)
 
     def _flush(self) -> dict:
         losses = [l for l, _, _ in self._flush_stats]
@@ -386,10 +430,13 @@ class AsyncFLServer:
         ranks: dict[str, int] = {}
         for _, _, r in self._flush_stats:
             ranks[str(r)] = ranks.get(str(r), 0) + 1
-        n_buf = len(self.aggregator.pending)
+        n_buf = self.aggregator.buffered
         weights = [wt for _, wt in self.aggregator.pending]
         mean_u = self.aggregator.flush()   # fused buffered packed sum
-        self._apply_delta(mean_u, weights)
+        if self.acfg.streaming_agg:
+            self._apply_delta_streaming(mean_u)
+        else:
+            self._apply_delta(mean_u, weights)
         self._flush_starts = []
         self._bcast_memo = {}          # broadcasts of the old version
         self.version += 1
@@ -419,7 +466,7 @@ class AsyncFLServer:
         self._fill_pipeline()
         while self.n_arrived < self.acfg.total_arrivals:
             self.step()
-        if self.aggregator.pending:
+        if self.aggregator.buffered:
             self._flush()
         return self.history
 
@@ -443,8 +490,14 @@ class AsyncFLServer:
             return
         # checkpoints align to flush boundaries: the FedBuff buffer is
         # empty by construction, so the buffered messages never need to
-        # serialize — everything else does
-        assert not self.aggregator.pending and not self._flush_starts, \
+        # serialize — everything else does. The same alignment empties
+        # the streaming accumulators (flush resets them) and the start
+        # sum, so the streaming state checkpoints as its empty value;
+        # mid-buffer accumulator round-trip is covered at unit level by
+        # StreamingFlatAccumulator.state()/from_state.
+        assert (not self.aggregator.pending and not self._flush_starts
+                and self.aggregator.buffered == 0
+                and self._start_sum is None), \
             "async checkpoint must align to a flush boundary"
         trees: dict[str, Any] = {"train": self.global_train}
         meta_if: dict[str, dict] = {}
@@ -495,6 +548,9 @@ class AsyncFLServer:
         self._up_cum = meta["up_cum"]
         self.history = list(meta["history"])
         self._flush_stats = []
+        self._start_sum, self._start_weight = None, 0.0
+        for st in self.aggregator.streams.values():
+            st.reset()      # checkpoint boundary == empty accumulators
         self.inflight = {}
         for s, m in meta["inflight"].items():
             idx = int(s)

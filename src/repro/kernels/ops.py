@@ -7,15 +7,17 @@ execution, used by the test-suite oracles.
 """
 from __future__ import annotations
 
+import functools
 from functools import partial
 
 import jax
 import jax.numpy as jnp
 import numpy as np
+from jax.sharding import Mesh, PartitionSpec as P
 
 from repro.kernels import ref
 from repro.kernels.dequant_agg import dequant_agg_pallas, \
-    dequant_agg_rows_pallas
+    dequant_agg_rows_pallas, pick_block_k
 from repro.kernels.lora_matmul import lora_matmul_pallas
 from repro.kernels.quant_pack import quant_pack_pallas
 
@@ -99,29 +101,95 @@ def quant_pack_rows(x2d: Array, n_valid: Array, bits: int,
     return packed[:c], scale[:c], zp[:c]
 
 
-@partial(jax.jit, static_argnames=("bits", "block_c"))
+@partial(jax.jit, static_argnames=("bits", "block_c", "block_k"))
 def dequant_agg_rows(packed: Array, scale: Array, zp: Array,
                      weights: Array, n_valid: Array, bits: int,
-                     block_c: int = 8) -> Array:
+                     block_c: int = 8,
+                     block_k: int | None = None) -> Array:
     """Flat-tree cohort aggregate: packed (K, C, Nw), sidecars (K, C),
     per-row lengths (C,). ONE launch unpacks + dequantizes + reduces the
     whole K-client message set; row tails come back as exact zeros.
-    Off-TPU: the bit-identical jnp twin inside the same program."""
+    ``block_k`` (default: VMEM-budget auto-pick) tiles the client dim so
+    fleet-scale cohorts stream through a bounded working set.
+    Off-TPU: the jnp twin inside the same program, K-chunked via scan
+    past one tile so time stays linear in K and memory flat."""
     nv = jnp.asarray(n_valid, jnp.int32)
     w = weights.astype(jnp.float32)
     zpz = jnp.where(scale > 0, zp, 0.0)
+    k, c, nw = packed.shape
+    bk = pick_block_k(k, nw, bits, block_c) if block_k is None \
+        else int(block_k)
     if _interpret():
-        lv = ref.unpack_words(packed, bits).astype(jnp.float32)
-        deq = (lv - zpz[..., None]) * scale[..., None]
-        out = jnp.einsum("k,kcn->cn", w, deq)
+        if k <= bk:
+            lv = ref.unpack_words(packed, bits).astype(jnp.float32)
+            deq = (lv - zpz[..., None]) * scale[..., None]
+            out = jnp.einsum("k,kcn->cn", w, deq)
+        else:
+            nt = -(-k // bk)
+            pc = _pad_to(packed, bk, 0).reshape(nt, bk, c, nw)
+            sc = _pad_to(scale, bk, 0).reshape(nt, bk, c)
+            zc = _pad_to(zpz, bk, 0).reshape(nt, bk, c)
+            wc = _pad_to(w, bk, 0).reshape(nt, bk)
+
+            def fold(acc, xs):
+                p, s, z, wt = xs
+                lv = ref.unpack_words(p, bits).astype(jnp.float32)
+                deq = (lv - z[..., None]) * s[..., None]
+                return acc + jnp.einsum("k,kcn->cn", wt, deq), None
+
+            out, _ = jax.lax.scan(
+                fold, jnp.zeros((c, nw * (32 // bits)), jnp.float32),
+                (pc, sc, zc, wc))
         col = jax.lax.broadcasted_iota(jnp.int32, out.shape, 1)
         return jnp.where(col < nv[:, None], out, 0.0)
-    kp = _pad_to(packed, block_c, 1)
-    sp = _pad_to(scale, block_c, 1)
-    out = dequant_agg_rows_pallas(kp, sp, _pad_to(zpz, block_c, 1), w,
-                                  _pad_to(nv, block_c, 0), bits,
-                                  block_c=block_c)
-    return out[: packed.shape[1]]
+    return dequant_agg_rows_pallas(packed, scale, zpz, w, nv, bits,
+                                   block_c=block_c, block_k=bk)
+
+
+# -- mesh-sharded cohort reduction (the scale-out layer) --------------------
+
+CLIENT_AXIS = "clients"
+
+
+@functools.lru_cache(maxsize=None)
+def _sharded_agg_fn(mesh: Mesh, axis: str, bits: int, block_c: int,
+                    block_k: int | None):
+    from jax.experimental.shard_map import shard_map
+
+    spec = P(axis)
+
+    @partial(shard_map, mesh=mesh,
+             in_specs=(spec, spec, spec, spec, P()), out_specs=P(),
+             check_rep=False)
+    def _local(p, s, z, w, nv):
+        part = dequant_agg_rows(p, s, z, w, nv, bits, block_c=block_c,
+                                block_k=block_k)
+        return jax.lax.psum(part, axis)
+
+    return jax.jit(_local)
+
+
+def dequant_agg_rows_sharded(packed: Array, scale: Array, zp: Array,
+                             weights: Array, n_valid: Array, bits: int,
+                             mesh: Mesh, axis: str = CLIENT_AXIS,
+                             block_c: int = 8,
+                             block_k: int | None = None) -> Array:
+    """``dequant_agg_rows`` with the K client dim sharded over ``axis``
+    of ``mesh`` (``launch.mesh.make_client_mesh``): every device folds
+    its local client shard through the K-tiled kernel and ONE psum
+    combines the partial sums, so aggregate reduction bandwidth scales
+    with the device count. K pads to the axis size with zero-weight
+    phantom clients (exact-zero contributions)."""
+    n_sh = dict(zip(mesh.axis_names, mesh.devices.shape))[axis]
+    k = packed.shape[0]
+    if k % n_sh:
+        packed = _pad_to(packed, n_sh, 0)
+        scale = _pad_to(scale, n_sh, 0)
+        zp = _pad_to(zp, n_sh, 0)
+        weights = _pad_to(weights.astype(jnp.float32), n_sh, 0)
+    fn = _sharded_agg_fn(mesh, axis, bits, block_c, block_k)
+    return fn(packed, scale, zp, weights.astype(jnp.float32),
+              jnp.asarray(n_valid, jnp.int32))
 
 
 @partial(jax.jit, static_argnames=("bits", "block_c"))
@@ -131,15 +199,11 @@ def dequant_agg(packed: Array, scale: Array, zp: Array, weights: Array,
     """``n_valid`` (optional (C,) vector) masks each row's tail to exact
     zero — the flat-tree codec aggregates every leaf of a K-client
     cohort in one launch and slices the rows apart afterwards."""
-    kp = _pad_to(packed, block_c, 1)
-    sp = _pad_to(scale, block_c, 1)
-    zpp = _pad_to(zp, block_c, 1)
-    nvp = None if n_valid is None else \
-        _pad_to(jnp.asarray(n_valid, jnp.int32), block_c, 0)
-    out = dequant_agg_pallas(kp, sp, jnp.where(sp > 0, zpp, 0.0), weights,
-                             bits, n_valid=nvp, block_c=block_c,
-                             interpret=_interpret())
-    return out[: packed.shape[1]]
+    nvp = None if n_valid is None else jnp.asarray(n_valid, jnp.int32)
+    return dequant_agg_pallas(packed, scale,
+                              jnp.where(scale > 0, zp, 0.0), weights,
+                              bits, n_valid=nvp, block_c=block_c,
+                              interpret=_interpret())
 
 
 @partial(jax.jit, static_argnames=("s",))

@@ -26,3 +26,14 @@ def make_host_mesh() -> Mesh:
     """1-device mesh for smoke tests / laptop runs (elastic lower bound)."""
     return Mesh(np.asarray(jax.devices()[:1]).reshape(1, 1),
                 ("data", "model"))
+
+
+def make_client_mesh(n_devices: int | None = None) -> Mesh:
+    """1-D mesh over the ``clients`` axis for fleet-scale cohort
+    reduction: the flat wire buffer's K client dim shards across it and
+    each device folds its shard through the K-tiled dequant-agg kernel
+    (``kernels.ops.dequant_agg_rows_sharded`` /
+    ``core.flat.fedavg_packed_flat_sharded``)."""
+    devs = jax.devices()
+    n = len(devs) if n_devices is None else min(int(n_devices), len(devs))
+    return Mesh(np.asarray(devs[:n]), ("clients",))

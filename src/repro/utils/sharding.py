@@ -45,6 +45,10 @@ DEFAULT_RULES: dict[str, Any] = {
     "kv_proj": None,            # kv heads are few; replicate projections
     "kv_seq": ("model", "data"),  # split-KV decode over chips
     "mlp_nosplit": None,        # per-expert ff dim (expert axis is EP)
+    # fleet-scale cohort reduction: the flat wire buffer's K client dim
+    # shards over the 1-D client mesh (launch.mesh.make_client_mesh /
+    # kernels.ops.dequant_agg_rows_sharded)
+    "clients": "clients",
 }
 
 
