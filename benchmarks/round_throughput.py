@@ -48,6 +48,17 @@ initializes), and the streaming FedBuff per-arrival fold at
 buffer_size in {10, 100, 1000} (asserting per-fold cost stays flat,
 max/min <= 1.2, and steady-state folds compile 0 new programs).
 
+``--serve`` sweeps the MULTI-TENANT SERVING engine (src/repro/serve/,
+BENCH_7.json): a 1024-adapter wire-format cache over 2 rank buckets
+(4, 8), steady-state decode-step wall time for the fused
+gather+dequant+matmul path vs the dequant-then-matmul baseline at
+E=512 staged slots x M=64 rows (asserting fused >= baseline — the
+baseline re-materializes the whole fp32 slab every step, the fused
+path dequantizes only the M gathered adapters inside the matmul), a
+0-new-programs steady-state check, and the continuous-batching
+simulator's measured requests/sec + p50/p99 latency on both paths,
+plus an eviction-churn run on a capacity-constrained cache.
+
 ``--json PATH`` additionally writes every sweep row as machine-readable
 JSON ({"sweep", "args", "rows": [{"name", "time_us", ...metrics}]}), so
 perf trajectories can be tracked across PRs (BENCH_5.json onward).
@@ -610,6 +621,101 @@ def run_agg_scale(n_clients: int = 6, samples_per_client: int = 48,
     return rows
 
 
+def run_serve(iters: int = 3) -> list[dict]:
+    """Multi-tenant serving sweep (BENCH_7.json): fused wire-format
+    serving vs the dequant-then-matmul baseline over a 1024-adapter
+    fleet, plus the continuous-batching simulator on both paths."""
+    from repro import serve as S
+
+    rows = []
+    n_fleet, d = 1024, 256
+    weights, store = S.make_store(n_clients=n_fleet, d_model=d,
+                                  n_layers=2, ranks=(4, 8), bits=4,
+                                  seed=0)
+    total = sum(store.bytes_of(c) for c in store.cids)
+    rows.append(row("serve/store", bytes=total, clients=n_fleet,
+                    rank_buckets=2))
+
+    # -- steady-state decode step: fused vs dequant-then-matmul -------
+    # full fleet resident (wire-format at rest), E=512 slots/bucket
+    cache = S.AdapterCache(capacity_bytes=2 * total, qcfg=store.qcfg)
+    engines = {p: S.AdapterServingEngine(weights, 0.5, store.qcfg,
+                                         cache, fetch=store.fetch,
+                                         path=p, slab_slots=512)
+               for p in ("fused", "dequant")}
+    engines["fused"].admit(list(range(n_fleet)))
+    rng = np.random.default_rng(0)
+    m = 64
+    cids = [int(c) for c in rng.integers(0, n_fleet, m)]
+    x = jnp.asarray(rng.standard_normal((m, d)) * 0.5, jnp.float32)
+
+    # numerics: fused vs the per-row merged dense oracle
+    maxerr = float(jnp.max(jnp.abs(
+        engines["fused"].step(x, cids)
+        - engines["fused"].oracle_step(x, cids))))
+    assert maxerr < 1e-4, f"fused path drifted from oracle: {maxerr}"
+    rows.append(row("serve/oracle_check", maxerr=maxerr))
+
+    ts = {}
+    for p, eng in engines.items():
+        jax.block_until_ready(eng.step(x, cids))     # warm
+        ts[p] = _time(lambda: eng.step(x, cids), iters)
+        rows.append(row(f"serve/step_{p}_e512_m{m}", ts[p] * 1e6,
+                        rows_per_sec=round(m / ts[p])))
+    speedup = ts["dequant"] / ts["fused"]
+    assert speedup >= 1.0, \
+        f"fused serving slower than dequant-then-matmul: {speedup:.2f}x"
+    rows.append(row("serve/fused_vs_dequant", speedup=speedup))
+
+    # -- steady state compiles nothing --------------------------------
+    n0 = _COMPILES[0]
+    for _ in range(5):
+        jax.block_until_ready(engines["fused"].step(x, cids))
+    n_programs = _COMPILES[0] - n0
+    assert n_programs == 0, \
+        f"steady-state decode compiled {n_programs} programs"
+    rows.append(row("serve/steady_state_compiles", programs=n_programs))
+
+    # -- continuous-batching simulator: measured requests/sec ---------
+    wl = S.WorkloadConfig(n_requests=192, rate_rps=2000.0, gen_tokens=8,
+                          max_batch=8, zipf_a=1.1, seed=0)
+    sim = {}
+    for p in ("fused", "dequant"):
+        c = S.AdapterCache(capacity_bytes=2 * total, qcfg=store.qcfg)
+        # slab floor >= the run's per-bucket working set: the serving
+        # program shape is fixed from warmup on, so the measured run
+        # has 0 slab-growth recompiles
+        eng = S.AdapterServingEngine(weights, 0.5, store.qcfg, c,
+                                     fetch=store.fetch, path=p,
+                                     slab_slots=128)
+        sim[p] = S.simulate(eng, store, wl)
+        rows.append(row(f"serve/sim_{p}",
+                        requests_per_sec=sim[p]["requests_per_s"],
+                        tokens_per_sec=sim[p]["tokens_per_s"],
+                        p50_ms=sim[p]["p50_ms"],
+                        p99_ms=sim[p]["p99_ms"],
+                        hit_rate=sim[p]["hit_rate"]))
+    rows.append(row("serve/sim_fused_vs_dequant",
+                    speedup=sim["dequant"]["p50_ms"]
+                    / max(sim["fused"]["p50_ms"], 1e-9)))
+
+    # -- eviction churn on a capacity-constrained cache ---------------
+    c = S.AdapterCache(capacity_bytes=total // 16, qcfg=store.qcfg,
+                       policy="clock")
+    eng = S.AdapterServingEngine(weights, 0.5, store.qcfg, c,
+                                 fetch=store.fetch)
+    churn = S.simulate(eng, store, S.WorkloadConfig(
+        n_requests=192, rate_rps=2000.0, gen_tokens=4, max_batch=8,
+        zipf_a=1.0, seed=1))
+    assert churn["evictions"] > 0
+    rows.append(row("serve/sim_churn_cap1_16",
+                    requests_per_sec=churn["requests_per_s"],
+                    hit_rate=churn["hit_rate"],
+                    evictions=churn["evictions"],
+                    cache_entries=churn["cache_entries"]))
+    return rows
+
+
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--clients", type=int, default=6)
@@ -629,6 +735,11 @@ def main() -> None:
                     help="fleet-scale aggregation sweep: cohort "
                          "reduction to K=10000, sharded client mesh, "
                          "streaming FedBuff fold flatness (BENCH_6)")
+    ap.add_argument("--serve", action="store_true",
+                    help="multi-tenant serving sweep: fused wire-format "
+                         "decode vs dequant-then-matmul over a "
+                         "1024-adapter cache + request simulator "
+                         "(BENCH_7)")
     ap.add_argument("--arrivals", type=int, default=12,
                     help="virtual arrivals for the --async sweep")
     ap.add_argument("--json", type=str, default=None, metavar="PATH",
@@ -638,7 +749,10 @@ def main() -> None:
         ap.error("--clients/--samples/--iters must be >= 1")
     if args.arrivals < 1:
         ap.error("--arrivals must be >= 1")
-    if args.agg_scale:
+    if args.serve:
+        sweep = "serve"
+        rows = run_serve(args.iters)
+    elif args.agg_scale:
         sweep = "agg_scale"
         rows = run_agg_scale(args.clients, args.samples, args.iters)
     elif args.flat:

@@ -1,26 +1,26 @@
 """Serving with quantized FLoCoRA adapters: the server ships int8/int4
 adapter messages to an edge inference node, which dequantizes, MERGES
 them into the frozen base (W* = W + (α/r)·AB — zero added latency,
-paper §II-C) and serves.
+paper §II-C) and serves via the shared ``serve.generate()`` loop.
 
-Also demonstrates the fused Pallas lora_matmul path (unmerged serving,
-e.g. when one base hosts many adapters) against the merged oracle.
+Then the OTHER deployment shape: one base hosting MANY tenants'
+adapters, where merging is impossible. The multi-tenant engine keeps
+every adapter in its packed wire form (``serve.AdapterCache``) and
+serves mixed-rank request batches through the fused
+gather+dequant+matmul kernel — validated here against the merged
+``dense_merge`` oracle.
 
     PYTHONPATH=src python examples/serve_quantized.py
 """
-import sys
-
 import jax
 import jax.numpy as jnp
 import numpy as np
 
-sys.path.insert(0, "src")
-
 from repro.core import messages
-from repro.core.lora import LoRAConfig, dense_merge
+from repro.core.lora import LoRAConfig
 from repro.core.quant import QuantConfig
-from repro.kernels import ops
 from repro.models import lm as LM
+from repro import serve
 
 
 def main():
@@ -44,35 +44,37 @@ def main():
           f"{fp_bytes / wire_bytes:.1f}x)")
     train_edge = messages.roundtrip(train, qcfg)   # what the edge decodes
 
-    # --- generate with the dequantized adapters -------------------------
+    # --- generate with the dequantized adapters (merged, single tenant) -
     rng = np.random.default_rng(0)
     prompt = jnp.asarray(rng.integers(0, cfg.vocab, (2, 12)), jnp.int32)
-    logits, caches, pos = jax.jit(
-        lambda f, t, tok: LM.prefill(f, t, cfg, tok, max_seq=32))(
-        frozen, train_edge, prompt)
-    decode = jax.jit(lambda f, t, tok, c, p: LM.decode_step(
-        f, t, cfg, tok, c, p))
-    tok = jnp.argmax(logits, -1)[:, None].astype(jnp.int32)
-    toks = [tok]
-    for _ in range(8):
-        logits, caches = decode(frozen, train_edge, tok, caches, pos)
-        tok = jnp.argmax(logits[:, 0], -1)[:, None].astype(jnp.int32)
-        pos = pos + 1
-        toks.append(tok)
-    print("generated:", np.asarray(jnp.concatenate(toks, 1)))
+    toks, timing = serve.generate(frozen, train_edge, cfg, prompt, gen=9,
+                                  max_seq=32)
+    print("generated:", np.asarray(toks))
+    print(f"  prefill {timing['prefill_s']:.2f}s, "
+          f"{timing['decode_steps']} decode steps "
+          f"{timing['decode_s']:.2f}s")
 
-    # --- merged vs fused-kernel serving equivalence ---------------------
-    w = frozen["groups"][0][0]["mlp"]["wi"]["w"][0]          # (d, ff)
-    a = train_edge["groups"][0][0]["mlp"]["wi"]["a"][0]
-    b = train_edge["groups"][0][0]["mlp"]["wi"]["b"][0]
-    x = (jax.random.normal(jax.random.PRNGKey(2), (16, cfg.d_model)) * 0.5
-         ).astype(jnp.bfloat16)
-    y_merged = x @ dense_merge(w, a, b, cfg.lora.scale)
-    y_fused = ops.lora_matmul(x, w, a.astype(jnp.bfloat16),
-                              b.astype(jnp.bfloat16), cfg.lora.scale)
-    err = float(jnp.max(jnp.abs(y_merged.astype(jnp.float32)
-                                - y_fused.astype(jnp.float32))))
-    print(f"fused lora_matmul vs merged-weights: maxerr={err:.4f} (bf16)")
+    # --- multi-tenant: many adapters, one base, no merging --------------
+    # a fleet of 8 clients uplinks rank-4/rank-8 adapters for a 2-layer
+    # (d, d) chain; the engine serves a mixed batch straight from the
+    # packed wire bytes (dequant fused into the matmul)
+    weights, store = serve.make_store(n_clients=8, d_model=cfg.d_model,
+                                      n_layers=2, ranks=(4, 8), bits=4,
+                                      seed=0)
+    cache = serve.AdapterCache(capacity_bytes=1 << 20, qcfg=store.qcfg)
+    engine = serve.AdapterServingEngine(weights, scale=0.5,
+                                        qcfg=store.qcfg, cache=cache,
+                                        fetch=store.fetch)
+    cids = [0, 1, 2, 3, 4, 5, 6, 7]          # even: rank 4, odd: rank 8
+    engine.admit(cids)
+    x = jnp.asarray(rng.standard_normal((8, cfg.d_model)) * 0.5,
+                    jnp.float32)
+    y = engine.step(x, cids)
+    y_oracle = engine.oracle_step(x, cids)    # per-row merged dense
+    err = float(jnp.max(jnp.abs(y - y_oracle)))
+    print(f"multi-tenant fused serving vs merged oracle "
+          f"(8 tenants, ranks 4+8): maxerr={err:.2e}")
+    print(f"  cache: {cache.stats()}")
 
 
 if __name__ == "__main__":

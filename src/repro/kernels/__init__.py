@@ -8,6 +8,6 @@ Each has a pure-jnp oracle in ref.py; tests sweep shapes/dtypes/bits in
 interpret mode (this container is CPU-only; TPU is the target).
 """
 from repro.kernels.ops import quant_pack, quant_pack_rows, dequant_agg, \
-    dequant_agg_rows, lora_matmul, to_channel_first_2d, \
-    from_channel_first_2d
+    dequant_agg_rows, lora_matmul, multi_lora_matmul, \
+    multi_lora_matmul_packed, to_channel_first_2d, from_channel_first_2d
 from repro.kernels import ref

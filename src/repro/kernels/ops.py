@@ -18,7 +18,8 @@ from jax.sharding import Mesh, PartitionSpec as P
 from repro.kernels import ref
 from repro.kernels.dequant_agg import dequant_agg_pallas, \
     dequant_agg_rows_pallas, pick_block_k
-from repro.kernels.lora_matmul import lora_matmul_pallas
+from repro.kernels.lora_matmul import lora_matmul_pallas, \
+    multi_lora_matmul_pallas, multi_lora_matmul_q_pallas
 from repro.kernels.quant_pack import quant_pack_pallas
 
 Array = jax.Array
@@ -226,6 +227,113 @@ def lora_matmul(x: Array, w: Array, a: Array, b: Array, s: float) -> Array:
     bm, bn, bk = blk(m, 256), blk(n, 256), blk(k, 512)
     return lora_matmul_pallas(x, w, ap, bp, s, block_m=bm, block_n=bn,
                               block_k=bk, interpret=_interpret())
+
+
+# -- batched multi-adapter serving matmuls (the multi-tenant read path) -----
+
+def _blk(dim: int, target: int) -> int:
+    t = min(target, dim)
+    while dim % t:
+        t //= 2
+    return max(t, 1)
+
+
+def _multi_lora_matmul_jnp(x: Array, w: Array, a_stack: Array,
+                           b_stack: Array, ids: Array, s: float) -> Array:
+    """Bit-identical jnp twin of the multi-adapter kernel (same gather
+    semantics, same batched dot_generals, fp32 accumulation)."""
+    acc = jnp.dot(x, w, preferred_element_type=jnp.float32)
+    am = jnp.take(a_stack, ids, axis=0)                   # (M, K, R)
+    bm = jnp.take(b_stack, ids, axis=0)                   # (M, R, N)
+    h = jax.lax.dot_general(x, am, (((1,), (1,)), ((0,), (0,))),
+                            preferred_element_type=jnp.float32)
+    y = jax.lax.dot_general(h.astype(bm.dtype), bm,
+                            (((1,), (1,)), ((0,), (0,))),
+                            preferred_element_type=jnp.float32)
+    return (acc + s * y).astype(x.dtype)
+
+
+@partial(jax.jit, static_argnames=("s",))
+def multi_lora_matmul(x: Array, w: Array, a_stack: Array, b_stack: Array,
+                      ids: Array, s: float) -> Array:
+    """Batched multi-adapter  y[m] = x[m]@w + s*(x[m]@A[ids[m]])@B[ids[m]].
+
+    ``a_stack`` (E, K, R) / ``b_stack`` (E, R, N) are a rank bucket's
+    staged adapter slab; ``ids`` (M,) int32 picks each request row's
+    slot. Off-TPU this lowers to the bit-identical jnp twin inside the
+    same jitted program (the per-row gather walk would tax interpret
+    mode with exactly the per-request overhead batching removes)."""
+    ids = jnp.asarray(ids, jnp.int32)
+    if _interpret():
+        return _multi_lora_matmul_jnp(x, w, a_stack, b_stack, ids, s)
+    m, k = x.shape
+    n = w.shape[1]
+    r = a_stack.shape[2]
+    rp = max(128, ((r + 127) // 128) * 128)
+    ap = _pad_to(a_stack, rp, 2)
+    bp = _pad_to(b_stack, rp, 1)
+    mp = -(-m // 8) * 8
+    xp = _pad_to(x, 8, 0)
+    idp = _pad_to(ids, 8, 0)
+    out = multi_lora_matmul_pallas(xp, w, ap, bp, idp, s,
+                                   block_m=8, block_n=_blk(n, 256))
+    return out[:m] if mp != m else out
+
+
+def _multi_lora_matmul_q_jnp(x: Array, w: Array, aq: Array, a_scale: Array,
+                             a_zp: Array, bq: Array, b_scale: Array,
+                             b_zp: Array, ids: Array, s: float,
+                             bits: int) -> Array:
+    """Bit-identical jnp twin of the fused wire-format kernel: gather
+    PACKED words by row id, unpack + dequant + matmul in one program —
+    the fp32 adapter values exist only as a transient inside the jit."""
+    k = x.shape[1]
+    r = a_scale.shape[1]
+    xf = x.astype(jnp.float32)
+    acc = jnp.dot(xf, w.astype(jnp.float32),
+                  preferred_element_type=jnp.float32)
+    aw = jnp.take(aq, ids, axis=0)                        # (M, R, KW)
+    asc = jnp.take(a_scale, ids, axis=0)
+    azp = jnp.take(a_zp, ids, axis=0)
+    bw = jnp.take(bq, ids, axis=0)                        # (M, N, RW)
+    bsc = jnp.take(b_scale, ids, axis=0)
+    bzp = jnp.take(b_zp, ids, axis=0)
+    la = ref.unpack_words(aw, bits)[..., :k].astype(jnp.float32)
+    adeq = (la - azp[..., None]) * asc[..., None]         # (M, R, K)
+    lb = ref.unpack_words(bw, bits)[..., :r].astype(jnp.float32)
+    bdeq = (lb - bzp[..., None]) * bsc[..., None]         # (M, N, R)
+    h = jax.lax.dot_general(xf, adeq, (((1,), (2,)), ((0,), (0,))),
+                            preferred_element_type=jnp.float32)
+    y = jax.lax.dot_general(h, bdeq, (((1,), (2,)), ((0,), (0,))),
+                            preferred_element_type=jnp.float32)
+    return (acc + s * y).astype(x.dtype)
+
+
+@partial(jax.jit, static_argnames=("s", "bits"))
+def multi_lora_matmul_packed(x: Array, w: Array, aq: Array, a_scale: Array,
+                             a_zp: Array, bq: Array, b_scale: Array,
+                             b_zp: Array, ids: Array, s: float,
+                             bits: int) -> Array:
+    """The FUSED wire-format serving matmul: adapters stay in the packed
+    uint32 wire form (channel-first rows + fp32 scale/zp sidecars, the
+    ``quant_pack``/``core/flat.py`` layout) and dequant fuses into the
+    matmul — an uplinked adapter serves without ever materializing an
+    fp32 adapter tree. Slab layout: aq (E, R, KW), sidecars (E, R);
+    bq (E, N, RW), sidecars (E, N); compact word counts (KW*per >= K,
+    RW*per >= R, zero tails). Rank-bucket padding rides rows with
+    scale=0 sidecars (exact-zero contributions)."""
+    ids = jnp.asarray(ids, jnp.int32)
+    if _interpret():
+        return _multi_lora_matmul_q_jnp(x, w, aq, a_scale, a_zp, bq,
+                                        b_scale, b_zp, ids, s, bits)
+    m = x.shape[0]
+    n = w.shape[1]
+    xp = _pad_to(x, 8, 0)
+    idp = _pad_to(ids, 8, 0)
+    out = multi_lora_matmul_q_pallas(xp, w, aq, a_scale, a_zp, bq,
+                                     b_scale, b_zp, idp, s, bits,
+                                     block_m=8, block_n=_blk(n, 256))
+    return out[:m] if out.shape[0] != m else out
 
 
 # ---------------------------------------------------------------------------

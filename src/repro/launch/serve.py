@@ -1,12 +1,12 @@
 """Serving driver: prefill + batched autoregressive decode with the
 FLoCoRA adapters merged into the frozen base (zero added latency — the
-LoRA property the paper inherits, §II-C).
+LoRA property the paper inherits, §II-C). The token loop itself is the
+shared ``serve.generate()``.
 
     PYTHONPATH=src python -m repro.launch.serve \
         --arch gemma3-4b --smoke --prompt-len 16 --gen 16
 """
 import argparse
-import time
 
 import jax
 import jax.numpy as jnp
@@ -14,6 +14,7 @@ import numpy as np
 
 from repro.configs import registry
 from repro.models import lm as LM
+from repro.serve import generate
 
 
 def main():
@@ -38,39 +39,15 @@ def main():
     prompt = jnp.asarray(rng.integers(0, cfg.vocab,
                                       (args.batch, args.prompt_len)),
                          jnp.int32)
-    max_seq = args.prompt_len + args.gen + \
-        (cfg.prefix_len if cfg.prefix_lm else 0)
 
-    prefill = jax.jit(lambda f, t, tok: LM.prefill(f, t, cfg, tok,
-                                                   max_seq=max_seq))
-    decode = jax.jit(lambda f, t, tok, c, pos: LM.decode_step(
-        f, t, cfg, tok, c, pos))
-
-    t0 = time.time()
-    logits, caches, pos = prefill(frozen, train, prompt)
-    jax.block_until_ready(logits)
-    print(f"prefill({args.prompt_len} tokens): {time.time() - t0:.2f}s")
-
-    tok = jnp.argmax(logits, -1)[:, None].astype(jnp.int32)
-    out = [tok]
-    t0 = time.time()
-    key = jax.random.PRNGKey(0)
-    for i in range(args.gen - 1):
-        logits, caches = decode(frozen, train, tok, caches, pos)
-        if args.temperature > 0:
-            key, sk = jax.random.split(key)
-            tok = jax.random.categorical(
-                sk, logits[:, 0] / args.temperature)[:, None].astype(
-                jnp.int32)
-        else:
-            tok = jnp.argmax(logits[:, 0], -1)[:, None].astype(jnp.int32)
-        pos = pos + 1
-        out.append(tok)
-    jax.block_until_ready(tok)
-    dt = time.time() - t0
-    toks = jnp.concatenate(out, axis=1)
-    print(f"decode: {args.gen - 1} steps in {dt:.2f}s "
-          f"({(args.gen - 1) * args.batch / max(dt, 1e-9):.1f} tok/s)")
+    toks, timing = generate(frozen, train, cfg, prompt, args.gen,
+                            temperature=args.temperature, seed=0)
+    print(f"prefill({args.prompt_len} tokens): "
+          f"{timing['prefill_s']:.2f}s")
+    dt = timing["decode_s"]
+    print(f"decode: {timing['decode_steps']} steps in {dt:.2f}s "
+          f"({timing['decode_steps'] * args.batch / max(dt, 1e-9):.1f} "
+          f"tok/s)")
     for b in range(args.batch):
         print(f"  seq{b}: {list(np.asarray(toks[b]))}")
 

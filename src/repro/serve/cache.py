@@ -1,0 +1,355 @@
+"""Wire-format adapter cache for the multi-tenant serving engine.
+
+A serving node hosts ONE frozen base and thousands-to-millions of
+per-client adapters. Keeping every adapter dequantized would multiply
+the paper's 4.8-18.6x wire win away at rest — so the cache stores each
+client's adapters EXACTLY as they arrived on the wire: compact uint32
+packed rows + fp32 scale/zp sidecars (the ``quant_pack`` / flat-codec
+channel-first layout). Dequant happens inside the fused serving matmul
+(``kernels.ops.multi_lora_matmul_packed``); the cache never holds an
+fp32 adapter tree.
+
+Three pieces:
+
+  * :class:`PackedPair` — one adapter pair of one client in compact
+    wire rows (host numpy; the at-rest form);
+  * :class:`AdapterCache` — LRU or clock(second-chance) eviction keyed
+    by client id, capacity in MEASURED wire bytes
+    (``messages.message_wire_bytes`` accounting), hit/miss/eviction
+    counters;
+  * :meth:`AdapterCache.stage` — the host->device staging path: groups
+    the requested clients by pow2 RANK BUCKET (the hetero-rank cohort
+    convention from ``core/lora.py`` / ``fl/server.py``) and uploads
+    each bucket's adapters as ONE stacked slab per buffer, slots padded
+    to pow2 so steady-state decode shapes are stable (0 recompiles).
+
+Rank-bucket padding is exact: a rank-r adapter in a rank-rb bucket pads
+its A rows with scale=0 sidecars (dequant -> exact 0, so the extra
+h-lanes are zero) and its B words with zero words (their dequant value
+is multiplied by those zero h-lanes). The padding contributes exactly
+zero; outputs match serving at the true rank up to the dot reduction
+order of the differently-shaped program (~1 ulp).
+"""
+from __future__ import annotations
+
+import collections
+import dataclasses
+from typing import Any, NamedTuple, Optional, Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import lora, messages
+from repro.core.flat import is_flat_message
+from repro.core.quant import QuantConfig
+from repro.fl.client import pow2_pad
+from repro.kernels import ref as kref
+
+Array = jax.Array
+
+
+@dataclasses.dataclass(frozen=True)
+class PackedPair:
+    """One dense LoRA pair in compact wire rows (channel-first):
+    ``aq`` (r, KW) uint32 — A's r channel rows of d_in levels;
+    ``bq`` (d_out, RW) uint32 — B's d_out channel rows of r levels;
+    fp32 scale/zp sidecars per channel row. KW = ceil(d_in/per),
+    RW = ceil(r/per); word tails past the valid levels are zero (the
+    codec's packing contract, which bucket padding relies on)."""
+    aq: np.ndarray
+    a_scale: np.ndarray
+    a_zp: np.ndarray
+    bq: np.ndarray
+    b_scale: np.ndarray
+    b_zp: np.ndarray
+    d_in: int
+    d_out: int
+    rank: int
+    bits: int
+
+    def dequant(self) -> tuple[Array, Array]:
+        """-> fp32 (a (d_in, r), b (r, d_out)) — the ``unpack_message``
+        formula. ORACLE/TEST use only: the serving path never calls
+        this (dequant lives inside the fused matmul)."""
+        la = kref.unpack_words(jnp.asarray(self.aq),
+                               self.bits)[:, :self.d_in]
+        a2d = (la.astype(jnp.float32) - jnp.asarray(self.a_zp)[:, None]) \
+            * jnp.asarray(self.a_scale)[:, None]
+        lb = kref.unpack_words(jnp.asarray(self.bq),
+                               self.bits)[:, :self.rank]
+        b2d = (lb.astype(jnp.float32) - jnp.asarray(self.b_zp)[:, None]) \
+            * jnp.asarray(self.b_scale)[:, None]
+        return a2d.T, b2d.T
+
+
+@dataclasses.dataclass
+class CacheEntry:
+    cid: int
+    rank: int
+    nbytes: int
+    pairs: tuple[PackedPair, ...]
+    ref: bool = True              # clock second-chance bit
+
+
+class StagedLayer(NamedTuple):
+    """One layer of one rank bucket's device-resident adapter slab
+    (a pytree — rides straight into the jitted serving chain)."""
+    aq: Array        # (E, rb, KW) uint32
+    a_scale: Array   # (E, rb) fp32
+    a_zp: Array
+    bq: Array        # (E, d_out, RWb) uint32
+    b_scale: Array   # (E, d_out) fp32
+    b_zp: Array
+
+
+@dataclasses.dataclass
+class StagedBucket:
+    rank: int                     # pow2 bucket rank rb
+    slots: dict[int, int]         # cid -> slot index in the slab
+    layers: tuple[StagedLayer, ...]
+    n_slots: int                  # pow2-padded E dim
+
+
+def extract_pairs(msg: Any, bits: int) -> tuple[int, tuple[PackedPair, ...]]:
+    """Wire message (PackedLeaf tree or flat-tree message) -> compact
+    host-side pairs in flatten order. Payload bits are copied verbatim
+    (compact word slice of the lane-padded kernel rows); nothing is
+    dequantized. Returns (adapter rank, pairs)."""
+    if is_flat_message(msg):
+        msg = msg.as_tree()
+    found: list[dict] = []
+    lora._walk_pairs(msg, lambda p: (found.append(p), p)[1])
+    if not found:
+        raise ValueError("message carries no adapter pairs")
+    per = 32 // bits
+    pairs = []
+    for p in found:
+        a, b = p["a"], p["b"]
+        if lora.adapter_kind(a, b) != "dense":
+            raise ValueError("the serving cache handles dense adapter "
+                             f"pairs; got a{tuple(a.shape)} "
+                             f"b{tuple(b.shape)}")
+        if not (messages.is_packed_leaf(a) and messages.is_packed_leaf(b)):
+            raise ValueError("adapters must arrive in wire form "
+                             "(pack_message) — the cache stores packed "
+                             "payloads only, never fp32")
+        d_in, r = a.shape
+        d_out = b.shape[1]
+        kw = -(-d_in // per)
+        rw = -(-r // per)
+        pairs.append(PackedPair(
+            aq=np.asarray(jax.device_get(a.payload))[:, :kw],
+            a_scale=np.asarray(jax.device_get(a.scale), np.float32),
+            a_zp=np.asarray(jax.device_get(a.zp), np.float32),
+            bq=np.asarray(jax.device_get(b.payload))[:, :rw],
+            b_scale=np.asarray(jax.device_get(b.scale), np.float32),
+            b_zp=np.asarray(jax.device_get(b.zp), np.float32),
+            d_in=d_in, d_out=d_out, rank=r, bits=bits))
+    ranks = {p.rank for p in pairs}
+    if len(ranks) != 1:
+        raise ValueError(f"mixed ranks within one message: {ranks}")
+    return ranks.pop(), tuple(pairs)
+
+
+def wire_bytes_of(msg: Any, qcfg: QuantConfig) -> int:
+    """Static ``message_wire_bytes`` accounting for a WIRE message: the
+    packed leaves are walked by their original fp shapes (shape-only,
+    no payload touch)."""
+    if is_flat_message(msg):
+        return messages.message_wire_bytes(msg.shape_tree(), qcfg)
+
+    def proxy(t):
+        if messages.is_wire_leaf(t):
+            return jax.ShapeDtypeStruct(tuple(t.shape), jnp.float32)
+        return t
+
+    tree = jax.tree.map(proxy, msg, is_leaf=messages.is_wire_leaf)
+    return messages.message_wire_bytes(tree, qcfg)
+
+
+class AdapterCache:
+    """LRU / clock adapter cache keyed by client id, wire-format at
+    rest, capacity in wire bytes. ``lookup`` counts hits/misses (call
+    it at request ADMISSION, one count per request); ``peek`` is the
+    uncounted read the decode loop uses."""
+
+    def __init__(self, capacity_bytes: int, qcfg: QuantConfig,
+                 policy: str = "lru"):
+        if policy not in ("lru", "clock"):
+            raise ValueError(f"unknown eviction policy: {policy!r}")
+        if not qcfg.enabled:
+            raise ValueError("the serving cache stores the packed wire "
+                             "form — quantization must be on")
+        self.capacity_bytes = int(capacity_bytes)
+        self.qcfg = qcfg
+        self.policy = policy
+        self._entries: "collections.OrderedDict[int, CacheEntry]" = \
+            collections.OrderedDict()
+        self._bytes = 0
+        self._bytes_memo: dict[int, int] = {}
+        self.hits = 0
+        self.misses = 0
+        self.evictions = 0
+        # monotonically bumped on put/evict; stale staged slabs key off it
+        self.version = 0
+        # in-flight refcounts: pinned entries are never evicted (a
+        # request's adapter must survive until its last decode step)
+        self._pins: collections.Counter = collections.Counter()
+
+    def __len__(self) -> int:
+        return len(self._entries)
+
+    def __contains__(self, cid: int) -> bool:
+        return cid in self._entries
+
+    @property
+    def nbytes(self) -> int:
+        return self._bytes
+
+    @property
+    def hit_rate(self) -> float:
+        n = self.hits + self.misses
+        return self.hits / n if n else 0.0
+
+    def stats(self) -> dict:
+        return {"entries": len(self._entries), "bytes": self._bytes,
+                "capacity_bytes": self.capacity_bytes, "hits": self.hits,
+                "misses": self.misses, "evictions": self.evictions,
+                "hit_rate": self.hit_rate}
+
+    # -- reads --------------------------------------------------------------
+
+    def lookup(self, cid: int) -> Optional[CacheEntry]:
+        e = self._entries.get(cid)
+        if e is None:
+            self.misses += 1
+            return None
+        self.hits += 1
+        self._touch(e)
+        return e
+
+    def peek(self, cid: int) -> Optional[CacheEntry]:
+        return self._entries.get(cid)
+
+    def _touch(self, e: CacheEntry) -> None:
+        if self.policy == "lru":
+            self._entries.move_to_end(e.cid)
+        else:
+            e.ref = True
+
+    # -- pinning ------------------------------------------------------------
+
+    def pin(self, cid: int) -> None:
+        """Refcounted eviction shield for an in-flight request's
+        adapter; pair every pin with an unpin at request completion."""
+        if cid not in self._entries:
+            raise KeyError(f"cannot pin uncached client {cid}")
+        self._pins[cid] += 1
+
+    def unpin(self, cid: int) -> None:
+        self._pins[cid] -= 1
+        if self._pins[cid] <= 0:
+            del self._pins[cid]
+
+    def _pinned(self, cid: int) -> bool:
+        return self._pins.get(cid, 0) > 0
+
+    # -- writes -------------------------------------------------------------
+
+    def put(self, cid: int, msg: Any) -> CacheEntry:
+        """Insert/replace one client's WIRE message; evicts until the
+        byte budget holds."""
+        rank, pairs = extract_pairs(msg, self.qcfg.bits)
+        if rank not in self._bytes_memo:
+            self._bytes_memo[rank] = wire_bytes_of(msg, self.qcfg)
+        nbytes = self._bytes_memo[rank]
+        if cid in self._entries:
+            self._bytes -= self._entries.pop(cid).nbytes
+        e = CacheEntry(cid=cid, rank=rank, nbytes=nbytes, pairs=pairs)
+        self._entries[cid] = e
+        self._bytes += nbytes
+        self.version += 1
+        while self._bytes > self.capacity_bytes and len(self._entries) > 1:
+            if not self._evict_one(keep=cid):
+                break       # everything pinned: run over budget briefly
+        return e
+
+    def _evict_one(self, keep: int) -> bool:
+        """Evict one entry, never ``keep`` or a pinned cid. Returns
+        False when no entry is evictable."""
+        skip = lambda c: c == keep or self._pinned(c)
+        if all(skip(c) for c in self._entries):
+            return False
+        if self.policy == "lru":
+            victim = next(c for c in self._entries if not skip(c))
+        else:
+            # clock / second-chance: sweep in insertion order, clearing
+            # ref bits until an unreferenced evictable entry comes up
+            victim = None
+            while victim is None:
+                cid, e = next(iter(self._entries.items()))
+                if not skip(cid) and not e.ref:
+                    victim = cid
+                else:
+                    e.ref = False
+                    self._entries.move_to_end(cid)
+        self._bytes -= self._entries.pop(victim).nbytes
+        self.evictions += 1
+        self.version += 1
+        return True
+
+    # -- host -> device staging --------------------------------------------
+
+    def stage(self, cids: Sequence[int],
+              min_slots: int = 1) -> dict[int, StagedBucket]:
+        """Stage the given clients' adapters for a decode micro-batch:
+        group by pow2 rank bucket, build each bucket's per-layer stacked
+        slabs host-side, and upload each buffer ONCE (uploads batch per
+        bucket, not per client). Slots pad to pow2, and at least
+        ``min_slots`` (the engine passes its micro-batch width), so the
+        slab E dim — and with it the serving program's shape — is
+        STABLE across batch compositions; padded slots are all-zero and
+        never referenced."""
+        buckets: dict[int, list[CacheEntry]] = {}
+        for cid in dict.fromkeys(cids):         # de-dupe, keep order
+            e = self._entries.get(cid)
+            if e is None:
+                raise KeyError(f"client {cid} is not cached — admit() "
+                               "before staging")
+            buckets.setdefault(pow2_pad(e.rank), []).append(e)
+        out = {}
+        for rb, entries in sorted(buckets.items()):
+            out[rb] = self._stage_bucket(rb, entries, min_slots)
+        return out
+
+    def _stage_bucket(self, rb: int, entries: list[CacheEntry],
+                      min_slots: int = 1) -> StagedBucket:
+        per = 32 // self.qcfg.bits
+        n_slots = max(pow2_pad(len(entries)), pow2_pad(max(min_slots, 1)))
+        rwb = -(-rb // per)
+        layers = []
+        n_layers = len(entries[0].pairs)
+        for li in range(n_layers):
+            p0 = entries[0].pairs[li]
+            kw = p0.aq.shape[1]
+            aq = np.zeros((n_slots, rb, kw), np.uint32)
+            a_s = np.zeros((n_slots, rb), np.float32)
+            a_z = np.zeros((n_slots, rb), np.float32)
+            bq = np.zeros((n_slots, p0.d_out, rwb), np.uint32)
+            b_s = np.zeros((n_slots, p0.d_out), np.float32)
+            b_z = np.zeros((n_slots, p0.d_out), np.float32)
+            for slot, e in enumerate(entries):
+                p = e.pairs[li]
+                aq[slot, :p.rank, :] = p.aq
+                a_s[slot, :p.rank] = p.a_scale
+                a_z[slot, :p.rank] = p.a_zp
+                bq[slot, :, :p.bq.shape[1]] = p.bq
+                b_s[slot] = p.b_scale
+                b_z[slot] = p.b_zp
+            layers.append(StagedLayer(
+                jnp.asarray(aq), jnp.asarray(a_s), jnp.asarray(a_z),
+                jnp.asarray(bq), jnp.asarray(b_s), jnp.asarray(b_z)))
+        return StagedBucket(rank=rb,
+                            slots={e.cid: i for i, e in enumerate(entries)},
+                            layers=tuple(layers), n_slots=n_slots)

@@ -1,0 +1,248 @@
+"""Multi-tenant adapter serving engine: the FLoCoRA read path.
+
+One frozen base (a chain of linear layers), thousands of per-client
+adapters at rest in the wire-format :class:`~repro.serve.cache.
+AdapterCache`. A decode micro-batch carries a PER-ROW client id; the
+engine groups rows by pow2 rank bucket, stages each bucket's adapters
+as packed slabs, and runs one fused program per bucket per layer chain:
+
+  * ``path='fused'`` (production): ``multi_lora_matmul_packed`` —
+    gather packed words by row id, dequant INSIDE the matmul. An
+    uplinked adapter is servable without ever materializing an fp32
+    adapter tree (the TensorRT-LLM weight-only-quant idiom).
+  * ``path='dequant'`` (the baseline the benchmark beats): dequantize
+    the staged slab to fp32 stacks in one program, then the fp
+    multi-adapter matmul in a second — what serving looks like without
+    the fusion.
+  * :meth:`AdapterServingEngine.oracle_step` (numerics oracle): per-row
+    ``dense_merge`` of the dequantized pair into the base — the merged
+    serving the seed example did, kept as the correctness contract.
+
+Cache lookups are counted at ADMISSION (:meth:`admit` — one per
+request, optionally fetching a miss from the FL server's store); the
+per-token :meth:`step` reads the cache uncounted. Batch rows pad to
+pow2 (min 8) and slabs pad slots to pow2, so a steady-state decode
+step re-dispatches already-compiled programs: 0 new compiles.
+
+:func:`generate` is the shared LM prefill+decode loop used by
+``launch/serve.py`` and ``examples/serve_quantized.py`` (merged-adapter
+single-tenant serving — the zero-added-latency path of paper §II-C).
+"""
+from __future__ import annotations
+
+import time
+from functools import partial
+from typing import Any, Callable, Optional, Sequence
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import lora
+from repro.core.quant import QuantConfig
+from repro.fl.client import pow2_pad
+from repro.kernels import ops as kops
+from repro.kernels import ref as kref
+from repro.serve.cache import AdapterCache, StagedBucket, StagedLayer
+
+Array = jax.Array
+
+PATHS = ("fused", "dequant")
+
+
+@partial(jax.jit, static_argnames=("s", "bits"))
+def _fused_chain(x, ids, weights, layers, s: float, bits: int):
+    """One bucket's whole layer chain, one jitted program: every layer
+    is a fused gather+dequant+matmul over the packed slab."""
+    for w, lyr in zip(weights, layers):
+        x = kops.multi_lora_matmul_packed(
+            x, w, lyr.aq, lyr.a_scale, lyr.a_zp, lyr.bq, lyr.b_scale,
+            lyr.b_zp, ids, s, bits)
+    return x
+
+
+@partial(jax.jit, static_argnames=("bits", "k", "r"))
+def _dequant_stacks(lyr: StagedLayer, bits: int, k: int, r: int):
+    """Baseline program 1: materialize the staged slab as fp32 adapter
+    stacks (E, K, R) / (E, R, N) — the cost the fused path avoids."""
+    la = kref.unpack_words(lyr.aq, bits)[..., :k].astype(jnp.float32)
+    adeq = (la - lyr.a_zp[..., None]) * lyr.a_scale[..., None]
+    lb = kref.unpack_words(lyr.bq, bits)[..., :r].astype(jnp.float32)
+    bdeq = (lb - lyr.b_zp[..., None]) * lyr.b_scale[..., None]
+    return jnp.swapaxes(adeq, 1, 2), jnp.swapaxes(bdeq, 1, 2)
+
+
+class AdapterServingEngine:
+    """Serve ``weights`` (a chain of (d_in, d_out) frozen linears) with
+    per-request adapters from ``cache``. ``fetch(cid) -> wire message``
+    resolves admission misses from the adapter store (the FL server's
+    registry); without it a miss raises."""
+
+    def __init__(self, weights: Sequence[Array], scale: float,
+                 qcfg: QuantConfig, cache: AdapterCache,
+                 fetch: Optional[Callable[[int], Any]] = None,
+                 path: str = "fused", slab_slots: int = 8):
+        if path not in PATHS:
+            raise ValueError(f"path must be one of {PATHS}: {path!r}")
+        self.weights = tuple(jnp.asarray(w, jnp.float32) for w in weights)
+        self.scale = float(scale)
+        self.qcfg = qcfg
+        self.cache = cache
+        self.fetch = fetch
+        self.path = path
+        # slab slot floor: buckets pad to >= this many slots so the
+        # serving program's E dim is stable across batch compositions
+        # (keep >= the largest micro-batch for 0 steady-state compiles)
+        self.slab_slots = int(slab_slots)
+        # staged slabs memo: bucket rank -> ((cids key, cache version),
+        # StagedBucket); restages only when the working set changes
+        self._staged: dict[int, tuple[tuple, StagedBucket]] = {}
+
+    # -- admission (counted cache traffic) ----------------------------------
+
+    def admit(self, cids: Sequence[int]) -> int:
+        """One COUNTED cache lookup per request; misses fetch from the
+        store and land in the cache in wire form. Returns #misses."""
+        misses = 0
+        for cid in cids:
+            if self.cache.lookup(cid) is None:
+                misses += 1
+                if self.fetch is None:
+                    raise KeyError(f"client {cid} not cached and no "
+                                   "fetch callback configured")
+                self.cache.put(cid, self.fetch(cid))
+        return misses
+
+    # -- decode -------------------------------------------------------------
+
+    def step(self, x: Array, cids: Sequence[int]) -> Array:
+        """One decode micro-batch: x (B, d_in), cids length B. Rows
+        group by rank bucket; each bucket runs its own (already
+        compiled) program over its staged slab."""
+        cids = [int(c) for c in cids]
+        if x.shape[0] != len(cids):
+            raise ValueError(f"{x.shape[0]} rows vs {len(cids)} cids")
+        groups: dict[int, list[int]] = {}
+        for row, cid in enumerate(cids):
+            e = self.cache.peek(cid)
+            if e is None:
+                raise KeyError(f"client {cid} not cached — admit() first")
+            groups.setdefault(pow2_pad(e.rank), []).append(row)
+        n_out = self.weights[-1].shape[1]
+        y = jnp.zeros((len(cids), n_out), jnp.float32)
+        for rb, rows in sorted(groups.items()):
+            staged = self._staged_for(rb, [cids[r] for r in rows])
+            yb = self._bucket_step(
+                x[jnp.asarray(rows)], staged,
+                [staged.slots[cids[r]] for r in rows])
+            y = y.at[jnp.asarray(rows)].set(yb)
+        return y
+
+    def _staged_for(self, rb: int, bucket_cids: list[int]) -> StagedBucket:
+        """Working-set staging: the bucket's slab ACCUMULATES the
+        clients it has served, so steady-state batches over resident
+        adapters reuse the device slab with zero restaging/upload. A
+        cache write (put/evict bumps ``version``) or an unstaged client
+        rebuilds the slab from the still-cached working set plus the
+        new arrivals; the slot count only ever pow2-grows, so slab
+        recompiles are log-bounded."""
+        need = set(bucket_cids)
+        cur = self._staged.get(rb)
+        if cur is not None and cur[0] == self.cache.version \
+                and need <= cur[1].slots.keys():
+            return cur[1]
+        keep = [] if cur is None else [
+            c for c in cur[1].slots
+            if (e := self.cache.peek(c)) is not None
+            and pow2_pad(e.rank) == rb]
+        cids = keep + [c for c in bucket_cids if c not in set(keep)]
+        staged = self.cache.stage(cids, min_slots=self.slab_slots)[rb]
+        self._staged[rb] = (self.cache.version, staged)
+        return staged
+
+    def _bucket_step(self, xb: Array, staged: StagedBucket,
+                     slots: list[int]) -> Array:
+        m = xb.shape[0]
+        mp = max(8, pow2_pad(m))
+        xp = jnp.pad(xb, ((0, mp - m), (0, 0))) if mp != m else xb
+        ids = jnp.asarray(slots + [0] * (mp - m), jnp.int32)
+        bits = self.qcfg.bits
+        if self.path == "fused":
+            yp = _fused_chain(xp, ids, self.weights, staged.layers,
+                              self.scale, bits)
+        else:
+            yp = xp
+            for w, lyr in zip(self.weights, staged.layers):
+                a_stack, b_stack = _dequant_stacks(
+                    lyr, bits, w.shape[0], staged.rank)
+                yp = kops.multi_lora_matmul(yp, w, a_stack, b_stack,
+                                            ids, self.scale)
+        return yp[:m]
+
+    # -- numerics oracle ----------------------------------------------------
+
+    def oracle_step(self, x: Array, cids: Sequence[int]) -> Array:
+        """Per-row merged-dense serving (``dense_merge`` of the
+        DEQUANTIZED pair into the base) — the slow exact reference the
+        fused path is validated against. Test/debug only."""
+        ys = []
+        for row, cid in enumerate(cids):
+            e = self.cache.peek(int(cid))
+            if e is None:
+                raise KeyError(f"client {cid} not cached")
+            xv = x[row].astype(jnp.float32)
+            for w, pair in zip(self.weights, e.pairs):
+                a, b = pair.dequant()
+                xv = xv @ lora.dense_merge(w, a, b, self.scale)
+            ys.append(xv)
+        return jnp.stack(ys)
+
+
+# ---------------------------------------------------------------------------
+# Shared single-tenant LM serving loop (merged adapters, paper §II-C)
+# ---------------------------------------------------------------------------
+
+def generate(frozen: Any, train: Any, cfg: Any, prompt: Array,
+             gen: int, *, temperature: float = 0.0, seed: int = 0,
+             max_seq: Optional[int] = None
+             ) -> tuple[Array, dict[str, float]]:
+    """Prefill + autoregressive decode for a decoder LM: the ONE
+    serving loop ``launch/serve.py`` and ``examples/serve_quantized.py``
+    both drive (greedy argmax, or categorical at ``temperature > 0``).
+
+    Returns (tokens (B, gen) int32 — the prefill-argmax token plus
+    ``gen - 1`` decode steps — and wall timings
+    {'prefill_s', 'decode_s', 'decode_steps'})."""
+    from repro.models import lm as LM
+    if max_seq is None:
+        max_seq = prompt.shape[1] + gen + \
+            (cfg.prefix_len if getattr(cfg, "prefix_lm", False) else 0)
+
+    prefill = jax.jit(lambda f, t, tok: LM.prefill(f, t, cfg, tok,
+                                                   max_seq=max_seq))
+    decode = jax.jit(lambda f, t, tok, c, pos: LM.decode_step(
+        f, t, cfg, tok, c, pos))
+
+    t0 = time.time()
+    logits, caches, pos = prefill(frozen, train, prompt)
+    jax.block_until_ready(logits)
+    prefill_s = time.time() - t0
+
+    tok = jnp.argmax(logits, -1)[:, None].astype(jnp.int32)
+    out = [tok]
+    key = jax.random.PRNGKey(seed)
+    t0 = time.time()
+    for _ in range(gen - 1):
+        logits, caches = decode(frozen, train, tok, caches, pos)
+        if temperature > 0:
+            key, sk = jax.random.split(key)
+            tok = jax.random.categorical(
+                sk, logits[:, 0] / temperature)[:, None].astype(jnp.int32)
+        else:
+            tok = jnp.argmax(logits[:, 0], -1)[:, None].astype(jnp.int32)
+        pos = pos + 1
+        out.append(tok)
+    jax.block_until_ready(tok)
+    decode_s = time.time() - t0
+    return jnp.concatenate(out, axis=1), {
+        "prefill_s": prefill_s, "decode_s": decode_s,
+        "decode_steps": gen - 1}
