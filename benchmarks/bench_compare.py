@@ -1,0 +1,161 @@
+"""Bench regression gate: diff a fresh ``--json`` run against a
+committed baseline (BENCH_5.json / BENCH_7.json / ...).
+
+Rows are matched BY NAME. For each row present in both files:
+
+  * ``time_us`` — gated on the ratio new/old against a threshold
+    (default ``--threshold 1.5``: generous, because the committed
+    baselines and CI runners are noisy shared-CPU boxes; tighten with
+    per-row overrides ``--row-threshold name=ratio`` for rows known to
+    be stable). Rows missing ``time_us`` on either side are skipped for
+    timing (untimed rows omit the key by design — see
+    ``round_throughput.row``);
+  * ``bytes`` — wire sizes are DETERMINISTIC: any change is reported as
+    a regression (byte drift means the codec changed, which is a
+    correctness event, not noise);
+  * counter-like fields (``programs``, ``compiles``) — an INCREASE is a
+    regression (more compiled programs = a retracing leak).
+
+Rows only in the baseline are reported missing (a renamed/deleted
+measurement should update the baseline deliberately); rows only in the
+new run are informational.
+
+Cross-backend comparisons are refused via the ``meta`` block
+(``repro.obs.meta.comparable``: backend / device kind / jax version
+must agree) unless ``--allow-cross-backend`` — a CPU baseline says
+nothing about a GPU regression. Baselines predating the meta block
+compare without the check.
+
+Exit status: 0 when clean (or ``--warn-only``), 1 on any regression.
+
+    PYTHONPATH=src python -m benchmarks.bench_compare \
+        BENCH_5.json bench_flat.json [--threshold 1.5] \
+        [--row-threshold flat/agg_flat_k16=1.3] [--warn-only]
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+
+from repro.obs.meta import comparable
+
+# fields where MORE is a regression regardless of timing noise
+COUNTER_KEYS = ("programs", "compiles")
+
+
+def load(path: str) -> dict:
+    with open(path) as f:
+        doc = json.load(f)
+    if "rows" not in doc:
+        raise SystemExit(f"{path}: not a bench JSON (no 'rows')")
+    return doc
+
+
+def index_rows(doc: dict) -> dict[str, dict]:
+    out: dict[str, dict] = {}
+    for r in doc["rows"]:
+        # later duplicates win (sweeps may re-emit a row per K; names
+        # embed K so real sweeps never collide)
+        out[r["name"]] = r
+    return out
+
+
+def compare(base: dict, new: dict, threshold: float,
+            row_thresholds: dict[str, float]) -> tuple[list[str],
+                                                       list[str]]:
+    """Returns (regressions, notes) as printable strings."""
+    b_rows, n_rows = index_rows(base), index_rows(new)
+    regressions: list[str] = []
+    notes: list[str] = []
+    for name, b in b_rows.items():
+        n = n_rows.get(name)
+        if n is None:
+            regressions.append(f"{name}: row missing from new run")
+            continue
+        if "time_us" in b and "time_us" in n:
+            t0, t1 = float(b["time_us"]), float(n["time_us"])
+            lim = row_thresholds.get(name, threshold)
+            ratio = t1 / t0 if t0 > 0 else float("inf")
+            if t0 > 0 and ratio > lim:
+                regressions.append(
+                    f"{name}: time_us {t0:.0f} -> {t1:.0f} "
+                    f"({ratio:.2f}x > {lim:.2f}x)")
+            else:
+                notes.append(f"{name}: time_us {t0:.0f} -> {t1:.0f} "
+                             f"({ratio:.2f}x)")
+        if "bytes" in b and "bytes" in n and b["bytes"] != n["bytes"]:
+            regressions.append(
+                f"{name}: bytes {b['bytes']} -> {n['bytes']} "
+                "(wire sizes are deterministic; update the baseline "
+                "only with a deliberate codec change)")
+        for k in COUNTER_KEYS:
+            if k in b and k in n and float(n[k]) > float(b[k]):
+                regressions.append(
+                    f"{name}: {k} {b[k]} -> {n[k]} (compile/program "
+                    "count increased)")
+    for name in n_rows:
+        if name not in b_rows:
+            notes.append(f"{name}: new row (not in baseline)")
+    return regressions, notes
+
+
+def parse_row_thresholds(pairs: list[str]) -> dict[str, float]:
+    out: dict[str, float] = {}
+    for p in pairs:
+        name, _, val = p.rpartition("=")
+        if not name:
+            raise SystemExit(f"--row-threshold wants name=ratio, got {p!r}")
+        out[name] = float(val)
+    return out
+
+
+def main(argv: list[str] | None = None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("baseline", help="committed bench JSON")
+    ap.add_argument("new", help="fresh --json run to gate")
+    ap.add_argument("--threshold", type=float, default=1.5,
+                    help="default max time_us ratio new/old (1.5)")
+    ap.add_argument("--row-threshold", action="append", default=[],
+                    metavar="NAME=RATIO",
+                    help="per-row time_us ratio override (repeatable)")
+    ap.add_argument("--warn-only", action="store_true",
+                    help="report regressions but exit 0")
+    ap.add_argument("--allow-cross-backend", action="store_true",
+                    help="compare despite backend/device/jax mismatch")
+    args = ap.parse_args(argv)
+
+    base, new = load(args.baseline), load(args.new)
+    if base.get("sweep") != new.get("sweep"):
+        raise SystemExit(
+            f"sweep mismatch: baseline={base.get('sweep')!r} "
+            f"new={new.get('sweep')!r}")
+    ok, mismatched = comparable(base.get("meta", {}),
+                                new.get("meta", {}))
+    if not ok:
+        msg = ("refusing cross-backend comparison; mismatched meta: "
+               + ", ".join(
+                   f"{k} {base['meta'].get(k)!r} != {new['meta'].get(k)!r}"
+                   for k in mismatched))
+        if not args.allow_cross_backend:
+            raise SystemExit(msg)
+        print(f"# WARNING: {msg} (continuing: --allow-cross-backend)")
+
+    regressions, notes = compare(
+        base, new, args.threshold,
+        parse_row_thresholds(args.row_threshold))
+    for ln in notes:
+        print(f"  ok   {ln}")
+    for ln in regressions:
+        print(f"  REGR {ln}")
+    print(f"# {len(regressions)} regression(s), "
+          f"{len(notes)} row(s) compared clean "
+          f"({args.baseline} vs {args.new})")
+    if regressions and args.warn_only:
+        print("# --warn-only: exiting 0 despite regressions")
+        return 0
+    return 1 if regressions else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

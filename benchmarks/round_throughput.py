@@ -98,15 +98,22 @@ from repro.fl.client import ClientConfig, make_cohort_trainer, \
     cohort_steps, pad_cohort_batches, pow2_pad
 from repro.models.resnet import ResNetConfig, init as rinit, loss_fn
 
-# compiled-program counter (the dispatch-count metric for --flat/--async)
-_COMPILES = [0]
-jax.monitoring.register_event_duration_secs_listener(
-    lambda e, d, **kw: _COMPILES.__setitem__(0, _COMPILES[0] + 1)
-    if e == "/jax/core/compile/backend_compile_duration" else None)
+# compiled-program counter (the dispatch-count metric for --flat/--async):
+# the process-wide jax.monitoring listener lives in repro.obs.compile now,
+# shared with the tests' fixture and the engines' watchdogs
+from repro.obs.compile import compile_count  # noqa: E402
+from repro.obs.meta import run_meta  # noqa: E402
 
 
-def row(name: str, time_us: float = 0.0, **metrics) -> dict:
-    return {"name": name, "time_us": round(float(time_us), 1), **metrics}
+def row(name: str, time_us=None, **metrics) -> dict:
+    """A bench row. ``time_us=None`` (counts, bytes, assert-style rows)
+    OMITS the key entirely — downstream compare tooling must not mistake
+    an untimed row for a 0us measurement."""
+    r = {"name": name}
+    if time_us is not None:
+        r["time_us"] = round(float(time_us), 1)
+    r.update(metrics)
+    return r
 
 
 def _fmt_val(v) -> str:
@@ -120,7 +127,8 @@ def _fmt_val(v) -> str:
 def format_row(r: dict) -> str:
     extras = " ".join(f"{k}={_fmt_val(v)}" for k, v in r.items()
                       if k not in ("name", "time_us"))
-    return f"{r['name']},{r['time_us']:.0f},{extras}"
+    t = f"{r['time_us']:.0f}" if "time_us" in r else "-"
+    return f"{r['name']},{t},{extras}"
 
 
 def _time(fn, iters: int) -> float:
@@ -393,14 +401,14 @@ def run_flat(n_clients: int = 6, samples_per_client: int = 48,
             x, is_leaf=messages.is_wire_leaf)[0])
 
     # cold pack: compiled programs per codec
-    n0 = _COMPILES[0]
+    n0 = compile_count()
     msg_per = messages.pack_message(train0, qcfg)
     _block(msg_per)
-    per_programs = _COMPILES[0] - n0
-    n0 = _COMPILES[0]
+    per_programs = compile_count() - n0
+    n0 = compile_count()
     msg_flat = messages.pack_message(train0, qcfg, flat=True)
     _block(msg_flat)
-    flat_programs = _COMPILES[0] - n0
+    flat_programs = compile_count() - n0
     assert messages.packed_wire_bytes(msg_flat) == \
         messages.packed_wire_bytes(msg_per) == \
         messages.message_wire_bytes(train0, qcfg)
@@ -431,12 +439,12 @@ def run_flat(n_clients: int = 6, samples_per_client: int = 48,
     for k in (4, 8, 16):
         w = jnp.ones((k,), jnp.float32)
         mp, mf = msgs_per[:k], msgs_flat[:k]
-        n0 = _COMPILES[0]
+        n0 = compile_count()
         _block(aggregation.fedavg_packed(mp, w))
-        agg_per_programs = _COMPILES[0] - n0
-        n0 = _COMPILES[0]
+        agg_per_programs = compile_count() - n0
+        n0 = compile_count()
         _block(aggregation.fedavg_packed(mf, w))
-        agg_flat_programs = _COMPILES[0] - n0
+        agg_flat_programs = compile_count() - n0
         t_per = _time(
             lambda: _block(aggregation.fedavg_packed(mp, w)), iters)
         t_flat = _time(
@@ -579,7 +587,7 @@ def run_agg_scale(n_clients: int = 6, samples_per_client: int = 48,
         # claim is that a fold late in a big buffer costs the same as
         # an early one, and the min filters 1-core timer jitter that
         # otherwise accumulates over a multi-second b=1000 run
-        n0 = _COMPILES[0]
+        n0 = compile_count()
         best = float("inf")
         for c0 in range(0, b, 10):
             nf = min(10, b - c0)
@@ -590,7 +598,7 @@ def run_agg_scale(n_clients: int = 6, samples_per_client: int = 48,
             for st in agg.streams.values():  # folds dispatch async
                 jax.block_until_ready(st.acc)
             best = min(best, (time.perf_counter() - t0) / nf)
-        nc = _COMPILES[0] - n0
+        nc = compile_count() - n0
         _block(agg.flush())                  # untimed: flush is O(msg)
         return best, nc
 
@@ -668,10 +676,10 @@ def run_serve(iters: int = 3) -> list[dict]:
     rows.append(row("serve/fused_vs_dequant", speedup=speedup))
 
     # -- steady state compiles nothing --------------------------------
-    n0 = _COMPILES[0]
+    n0 = compile_count()
     for _ in range(5):
         jax.block_until_ready(engines["fused"].step(x, cids))
-    n_programs = _COMPILES[0] - n0
+    n_programs = compile_count() - n0
     assert n_programs == 0, \
         f"steady-state decode compiled {n_programs} programs"
     rows.append(row("serve/steady_state_compiles", programs=n_programs))
@@ -787,6 +795,9 @@ def main() -> None:
                                 "iters": args.iters,
                                 "arrivals": args.arrivals,
                                 "rank_profile": args.rank_profile},
+                       # backend/device/version provenance: the compare
+                       # gate refuses cross-backend baselines on this
+                       "meta": run_meta(),
                        "rows": rows}, f, indent=1)
         print(f"# wrote {len(rows)} rows to {args.json}")
 

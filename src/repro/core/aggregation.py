@@ -39,6 +39,7 @@ from repro.core.messages import is_packed_leaf, is_wire_leaf
 from repro.core.quant import QuantConfig
 from repro.core.sparse import is_sparse_leaf
 from repro.kernels import ops as kops
+from repro.obs.compile import CompileWatchdog
 
 Array = jax.Array
 
@@ -476,23 +477,38 @@ class StreamingFlatAccumulator:
     fp_acc: tuple             # fp32 running sums of fp passthrough leaves
     weight: float = 0.0       # accumulated (discounted) weight
     count: int = 0            # messages folded since the last reset
+    # opt-in runtime enforcement of the zero-steady-state-compile
+    # invariant: every fold after the first (per reset cycle, which
+    # re-pages the accumulators) must re-dispatch the compiled fold
+    # program — a retrace raises obs.CompileBudgetExceeded
+    strict_compiles: bool = False
 
     @classmethod
-    def for_layout(cls, layout: Any) -> "StreamingFlatAccumulator":
+    def for_layout(cls, layout: Any,
+                   strict_compiles: bool = False
+                   ) -> "StreamingFlatAccumulator":
         acc = jnp.zeros((layout.c_total, layout.n_max), jnp.float32)
         fp = tuple(jnp.zeros(s.shape, jnp.float32)
                    for s in layout.leaves if not s.quantized)
-        return cls(layout, acc, fp)
+        return cls(layout, acc, fp, strict_compiles=strict_compiles)
 
     def fold(self, msg: FlatPackedMessage, w: float) -> None:
         if msg.layout != self.layout:
             raise ValueError("flat message layout does not match the "
                              "streaming accumulator's")
+        if self.strict_compiles and self.count > 0:
+            with CompileWatchdog(0, label="streaming flat fold "
+                                          f"#{self.count}"):
+                self._fold(msg, w)
+        else:
+            self._fold(msg, w)
+        self.weight += float(w)
+        self.count += 1
+
+    def _fold(self, msg: FlatPackedMessage, w: float) -> None:
         self.acc, self.fp_acc = flatcodec._fold_flat_impl(
             self.acc, self.fp_acc, msg.payload, msg.scale, msg.zp,
             msg.fp_leaves, float(w), self.layout)
-        self.weight += float(w)
-        self.count += 1
 
     def mean(self) -> Any:
         """The aggregated fp tree (original structure/dtypes)."""
@@ -572,6 +588,9 @@ class FedBuffAggregator:
     pending: list = dataclasses.field(default_factory=list)
     streaming: bool = False        # fold flat arrivals at add time
     streams: dict = dataclasses.field(default_factory=dict)
+    # threaded into every StreamingFlatAccumulator this aggregator
+    # creates: steady-state folds that retrace raise (obs watchdog)
+    strict_compiles: bool = False
 
     def resolved_half_life(self) -> float:
         return FEDBUFF_HALF_LIFE if self.half_life is None \
@@ -630,7 +649,8 @@ class FedBuffAggregator:
         if self.streaming and is_flat_message(msg):
             st = self.streams.get(msg.layout)
             if st is None:
-                st = StreamingFlatAccumulator.for_layout(msg.layout)
+                st = StreamingFlatAccumulator.for_layout(
+                    msg.layout, strict_compiles=self.strict_compiles)
                 self.streams[msg.layout] = st
             st.fold(msg, w)
         else:

@@ -76,6 +76,8 @@ from repro.fl.client import ClientConfig, cohort_steps, natural_steps, \
     stack_local_batches
 from repro.fl.server import WireAccounting
 from repro.fl.traces import FleetTrace
+from repro.obs import metrics as obsm
+from repro.obs import trace as obst
 from repro.utils.tree import tree_bytes
 
 Array = jax.Array
@@ -96,6 +98,8 @@ class AsyncConfig:
     half_life: float = 4.0       # staleness discount half-life (versions)
     server_lr: float = 1.0       # scale on the applied mean flush delta
     microbatch_window: float = 0.0  # virtual-seconds arrival grouping
+    strict_compiles: bool = False  # raise if a steady-state streaming
+    #                                fold recompiles (obs.CompileWatchdog)
     seed: int = 0
     eval_every: int = 5          # eval_fn every N flushes
     checkpoint_dir: Optional[str] = None
@@ -162,7 +166,9 @@ class AsyncFLServer:
                  trace: Optional[FleetTrace] = None,
                  eval_fn: Optional[Callable] = None,
                  aggregator: Optional[FedBuffAggregator] = None,
-                 trainer: Optional[Callable] = None):
+                 trainer: Optional[Callable] = None,
+                 registry: Optional[obsm.MetricsRegistry] = None,
+                 tracer: Optional[obst.Tracer] = None):
         self.frozen = model["frozen"]
         self.global_train = model["train"]
         self.loss_fn = loss_fn
@@ -171,6 +177,11 @@ class AsyncFLServer:
         self.trace = trace if trace is not None \
             else FleetTrace(seed=acfg.seed)
         self.eval_fn = eval_fn
+        # telemetry: spans land on the VIRTUAL clock (with_clock view),
+        # so exported timelines read in simulated fleet seconds
+        self.registry = obsm.get_registry(registry)
+        self.tracer = obst.get_tracer(tracer).with_clock(
+            lambda: self.clock)
         if fcfg.error_feedback:
             # an EF residual assumes the NEXT encode of the same client
             # compensates the previous one; async staleness breaks that
@@ -203,6 +214,11 @@ class AsyncFLServer:
                                   "streams": dict(aggregator.streams)}
         if acfg.streaming_agg:
             fields["streaming"] = True
+        if acfg.strict_compiles:
+            # zero-steady-state-compile invariant, enforced at runtime:
+            # every streaming fold after an accumulator's first raises
+            # CompileBudgetExceeded if the backend compiled
+            fields["strict_compiles"] = True
         if aggregator.half_life is None:
             fields["half_life"] = acfg.half_life    # config-threaded
         if aggregator.r_target is None:
@@ -213,7 +229,7 @@ class AsyncFLServer:
         # fixed schedule length across the fleet: the staggered cohort
         # program's (steps, B) never changes, only (rank, pow2 K) retrace
         self.schedule_steps = cohort_steps(client_data, ccfg)
-        self.wire = WireAccounting(fcfg)
+        self.wire = WireAccounting(fcfg, registry=self.registry)
         # -- simulation state (everything below round-trips checkpoints)
         self.clock = 0.0
         self.version = 0
@@ -276,6 +292,7 @@ class AsyncFLServer:
             self._bcast_memo[rank] = start
         down = self.wire.downlink_bytes(self.global_train, rank)
         self._down_cum += down
+        self.wire.record_down(rank, down)
         # message sizes are symmetric, so the round trip on the trace's
         # wire is 2x the measured downlink
         t_arr = self.trace.arrival(cid, idx, rank, 2 * down, self.clock)
@@ -284,6 +301,7 @@ class AsyncFLServer:
                                        self.clock, t_arr, n_k, start)
         heapq.heappush(self.heap, (t_arr, idx))
         self.n_dispatched += 1
+        self.registry.set("fl.inflight", len(self.inflight))
         return True
 
     def _fill_pipeline(self) -> None:
@@ -357,11 +375,21 @@ class AsyncFLServer:
         rec = self.inflight.pop(idx)
         self.clock = max(self.clock, t_arr)
         staleness = self.version - rec.version
-        self._up_cum += self.wire.uplink_bytes(
-            rec.rank, rec.msg,
-            self.fcfg.uplink_density(rec.version)) or 0
+        density = self.fcfg.uplink_density(rec.version)
+        up = self.wire.uplink_bytes(rec.rank, rec.msg, density) or 0
+        self._up_cum += up
+        self.wire.record_up(rec.rank, up, density)
         self.n_arrived += 1
+        # one dispatch->arrival span per update, on VIRTUAL time
+        self.tracer.event("fl/inflight", ts=rec.t_dispatch,
+                          dur=t_arr - rec.t_dispatch, track="fl/async",
+                          cid=rec.cid, rank=rec.rank,
+                          version=rec.version, staleness=staleness)
+        self.registry.observe("fl.staleness", staleness)
+        self.registry.set("fl.inflight", len(self.inflight))
         self.aggregator.add(rec.msg, rec.n_k, staleness)
+        self.registry.observe("fl.buffer_occupancy",
+                              self.aggregator.buffered)
         if self.acfg.streaming_agg:
             self._fold_start(
                 rec.start,
@@ -432,15 +460,19 @@ class AsyncFLServer:
             ranks[str(r)] = ranks.get(str(r), 0) + 1
         n_buf = self.aggregator.buffered
         weights = [wt for _, wt in self.aggregator.pending]
-        mean_u = self.aggregator.flush()   # fused buffered packed sum
-        if self.acfg.streaming_agg:
-            self._apply_delta_streaming(mean_u)
-        else:
-            self._apply_delta(mean_u, weights)
+        with self.tracer.span("fl/flush", track="fl/async",
+                              version=self.version, n_flushed=n_buf):
+            mean_u = self.aggregator.flush()  # fused buffered packed sum
+            if self.acfg.streaming_agg:
+                self._apply_delta_streaming(mean_u)
+            else:
+                self._apply_delta(mean_u, weights)
         self._flush_starts = []
         self._bcast_memo = {}          # broadcasts of the old version
+        density = self.fcfg.uplink_density(self.version)
         self.version += 1
         self.n_flushes += 1
+        self.registry.inc("fl.flushes")
         rec = {"version": self.version, "t_virtual": self.clock,
                "n_arrived": self.n_arrived, "n_flushed": n_buf,
                "client_loss": float(np.mean(losses)),
@@ -448,7 +480,10 @@ class AsyncFLServer:
                "staleness_max": int(max(stales)),
                "flush_ranks": ranks,
                "down_bytes": self._down_cum, "up_bytes": self._up_cum,
-               "tcc_bytes": self.tcc_bytes}
+               "tcc_bytes": self.tcc_bytes,
+               # schema-uniform with the sync history (None = dense);
+               # the density of the version this flush advanced FROM
+               "uplink_density": density}
         self._flush_stats = []
         if self.eval_fn and self.n_flushes % self.acfg.eval_every == 0:
             rec.update({k: float(v) for k, v in

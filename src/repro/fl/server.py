@@ -49,6 +49,8 @@ from repro.core.flocora import FLoCoRAConfig
 from repro.checkpoint import CheckpointManager
 from repro.fl.client import ClientConfig, cohort_steps, \
     make_cohort_trainer, pad_cohort_batches, pow2_pad, stack_cohort_batches
+from repro.obs import metrics as obsm
+from repro.obs import trace as obst
 from repro.utils.tree import tree_bytes
 
 Array = jax.Array
@@ -78,10 +80,18 @@ class WireAccounting:
     per key is exact for the whole run; the uplink re-measure
     cross-checks that EF/quant/rank/sparsity changes never desynchronize
     the accounting. Downlinks always travel dense, so their cache keys
-    stay per-rank."""
+    stay per-rank.
 
-    def __init__(self, fcfg: FLoCoRAConfig):
+    ``record_down``/``record_up`` additionally emit each ACTUAL
+    transfer as labeled obs counters (``wire.down_bytes`` /
+    ``wire.up_bytes`` by rank and uplink density) — the engines call
+    them once per dispatched/surviving client, so the registry's view
+    matches the cumulative TCC accounting."""
+
+    def __init__(self, fcfg: FLoCoRAConfig,
+                 registry: Optional[obsm.MetricsRegistry] = None):
         self.fcfg = fcfg
+        self.registry = obsm.get_registry(registry)
         self.down: dict[int, int] = {}
         self.up: dict[tuple[int, Optional[float]], int] = {}
 
@@ -109,6 +119,17 @@ class WireAccounting:
             self.up[(rank, density)] = got
         return got
 
+    # -- labeled transfer counters (one call per actual transfer) -----------
+    def record_down(self, rank: int, nbytes: int) -> None:
+        self.registry.inc("wire.down_bytes", nbytes, rank=rank)
+        self.registry.inc("wire.downlinks", rank=rank)
+
+    def record_up(self, rank: int, nbytes: int,
+                  density: Optional[float] = None) -> None:
+        self.registry.inc("wire.up_bytes", nbytes, rank=rank,
+                          density=density)
+        self.registry.inc("wire.uplinks", rank=rank, density=density)
+
 
 class FLServer:
     """Simulates the paper's FL loop (Fig. 1) over arbitrary models.
@@ -124,13 +145,19 @@ class FLServer:
                  client_data: list[dict], scfg: ServerConfig,
                  ccfg: ClientConfig, fcfg: FLoCoRAConfig,
                  eval_fn: Optional[Callable] = None,
-                 aggregator: Optional[Aggregator] = None):
+                 aggregator: Optional[Aggregator] = None,
+                 registry: Optional[obsm.MetricsRegistry] = None,
+                 tracer: Optional[obst.Tracer] = None):
         self.frozen = model["frozen"]
         self.global_train = model["train"]
         self.loss_fn = loss_fn
         self.client_data = client_data
         self.scfg, self.ccfg, self.fcfg = scfg, ccfg, fcfg
         self.eval_fn = eval_fn
+        # telemetry: None means the process defaults (disabled unless
+        # obs.enable() ran) — both are injectable per server
+        self.registry = obsm.get_registry(registry)
+        self.tracer = obst.get_tracer(tracer)
         self.rng = np.random.default_rng(scfg.seed)
         self.round = 0
         self.history: list[dict] = []
@@ -211,7 +238,7 @@ class FLServer:
         # TCC is derived from MEASURED emitted message sizes, cached per
         # client rank by the shared WireAccounting (also used by the
         # async engine)
-        self.wire = WireAccounting(fcfg)
+        self.wire = WireAccounting(fcfg, registry=self.registry)
         self.initial_model_bytes = tree_bytes(self.frozen)
         self._tcc_cum = self.initial_model_bytes
 
@@ -285,22 +312,34 @@ class FLServer:
                                   replace=False)
         rank_of = {int(cid): self._rank_for(int(cid), rnd)
                    for cid in sampled}
+        density = fcfg.uplink_density(rnd)
+        self.registry.inc("fl.rounds")
         # (1) broadcast precedes failure: downlink bytes are spent for
         # every dispatched client, at that client's rank
-        down_bytes = sum(self._downlink_bytes(r) for r in rank_of.values())
+        down_bytes = 0
+        for r in rank_of.values():
+            b = self._downlink_bytes(r)
+            down_bytes += b
+            self.wire.record_down(r, b)
 
         survivors = [int(cid) for cid in sampled
                      if self.rng.random() >= scfg.p_client_failure]
+        self.registry.inc("fl.clients_dropped",
+                          k_dispatch - len(survivors))
+        self.registry.observe("fl.cohort_size", len(survivors))
         if not survivors:
             # an all-dropout round still consumed its downlinks; record
-            # it so history (and TCC curves) never have gaps
+            # it so history (and TCC curves) never have gaps — with the
+            # SAME key set as an aggregating round (schema-asserted in
+            # tests/test_obs.py)
             self.round += 1
             self._tcc_cum += down_bytes
             rec = {"round": self.round, "n_agg": 0,
                    "n_dropped": k_dispatch, "n_straggled": 0,
                    "client_loss": float("nan"), "cohort_ranks": {},
                    "down_bytes": down_bytes, "up_bytes": 0,
-                   "round_bytes": down_bytes, "tcc_bytes": self._tcc_cum}
+                   "round_bytes": down_bytes, "tcc_bytes": self._tcc_cum,
+                   "uplink_density": density}
             self.history.append(rec)
             if self.ckpt and self.round % self.scfg.checkpoint_every == 0:
                 self.save()
@@ -315,40 +354,56 @@ class FLServer:
             buckets.setdefault(rank_of[cid], []).append(cid)
         latency = {cid: self.rng.exponential(1.0) for cid in survivors}
         ef = isinstance(self.aggregator, ErrorFeedbackFedAvg)
-        density = fcfg.uplink_density(rnd)
         results = []
         for r in sorted(buckets):
             cids = buckets[r]
-            g_bcast = flocora.broadcast(self.global_train, fcfg,
-                                        rank=self._bcast_rank(r))
-            datas = [self.client_data[cid] for cid in cids]
-            batches, n_steps = stack_cohort_batches(
-                self.rng, datas, self.ccfg,
-                steps=self.cohort_schedule_steps)
-            if self.rank_schedule is not None:
-                # pow2-padded buckets bound compile count for mixed
-                # fleets; uniform fleets keep the exact-K classic shape
-                batches, n_steps = pad_cohort_batches(
-                    batches, n_steps, pow2_pad(len(cids)))
-            batches = jax.tree.map(jnp.asarray, batches)
-            trained, losses = self.trainer(self.frozen, g_bcast, batches,
-                                           jnp.asarray(n_steps))
-            losses = np.asarray(losses)
-            for k, cid in enumerate(cids):
-                t_k = jax.tree.map(lambda x: x[k], trained)
-                res = self.aggregator.residual(cid, t_k) if ef else None
-                msg, res = flocora.client_uplink(t_k, fcfg, res, rnd=rnd)
-                n_i = len(next(iter(datas[k].values())))
-                results.append((latency[cid], n_i, msg,
-                                float(losses[k]), r, cid, res))
+            with self.tracer.span("fl/broadcast", track="fl/round",
+                                  round=rnd, rank=r, clients=len(cids)):
+                g_bcast = flocora.broadcast(self.global_train, fcfg,
+                                            rank=self._bcast_rank(r))
+                datas = [self.client_data[cid] for cid in cids]
+                batches, n_steps = stack_cohort_batches(
+                    self.rng, datas, self.ccfg,
+                    steps=self.cohort_schedule_steps)
+                if self.rank_schedule is not None:
+                    # pow2-padded buckets bound compile count for mixed
+                    # fleets; uniform fleets keep the exact-K classic
+                    # shape
+                    batches, n_steps = pad_cohort_batches(
+                        batches, n_steps, pow2_pad(len(cids)))
+                batches = jax.tree.map(jnp.asarray, batches)
+            with self.tracer.span("fl/client_train", track="fl/round",
+                                  round=rnd, rank=r, clients=len(cids)):
+                trained, losses = self.trainer(self.frozen, g_bcast,
+                                               batches,
+                                               jnp.asarray(n_steps))
+                losses = np.asarray(losses)
+            with self.tracer.span("fl/pack", track="fl/round",
+                                  round=rnd, rank=r, clients=len(cids)):
+                for k, cid in enumerate(cids):
+                    t_k = jax.tree.map(lambda x: x[k], trained)
+                    res = self.aggregator.residual(cid, t_k) \
+                        if ef else None
+                    msg, res = flocora.client_uplink(t_k, fcfg, res,
+                                                     rnd=rnd)
+                    n_i = len(next(iter(datas[k].values())))
+                    results.append((latency[cid], n_i, msg,
+                                    float(losses[k]), r, cid, res))
 
         # every survivor transmitted its uplink (stragglers included)
-        up_bytes = sum(self._uplink_bytes(r[4], r[2], density)
-                       for r in results)
+        with self.tracer.span("fl/uplink", track="fl/round", round=rnd,
+                              clients=len(results)):
+            up_bytes = 0
+            for r_i in results:
+                b = self._uplink_bytes(r_i[4], r_i[2], density)
+                up_bytes += b
+                self.wire.record_up(r_i[4], b, density)
 
         # straggler policy: first K arrivals win
         results.sort(key=lambda r: r[0])
         kept = results[:k_target]
+        self.registry.inc("fl.clients_straggled",
+                          len(results) - len(kept))
         if ef:
             # residuals commit AFTER the straggler cut: a kept client's
             # residual assumes delivery (e' = comp - deq(msg)); a
@@ -363,8 +418,10 @@ class FLServer:
         weights = jnp.asarray([r[1] for r in kept], jnp.float32)
         # (4) aggregation strategy; packed inputs lower onto the fused
         # dequant+reduce kernel, per rank bucket when the cohort is mixed
-        self.global_train = self.aggregator.aggregate(
-            [r[2] for r in kept], weights)
+        with self.tracer.span("fl/aggregate", track="fl/round",
+                              round=rnd, n_agg=len(kept)):
+            self.global_train = self.aggregator.aggregate(
+                [r[2] for r in kept], weights)
         self.round += 1
 
         self._tcc_cum += down_bytes + up_bytes
@@ -380,14 +437,15 @@ class FLServer:
                "round_bytes": down_bytes + up_bytes,
                # measured heterogeneous sums, incl. the shared-once
                # initial model (replaces Eq. 2's 2 * one_way * rounds)
-               "tcc_bytes": self._tcc_cum}
+               "tcc_bytes": self._tcc_cum,
+               # always present (None = dense uplink) so the history
+               # schema is uniform across sparse/dense/all-dropout rounds
+               "uplink_density": density}
         if fcfg.qcfg.enabled or density is not None:
             rec["up_bytes_measured"] = self._uplink_bytes(
                 max(kept_ranks, key=kept_ranks.get), density=density)
             rec["up_bytes_by_rank"] = {
                 r: b for (r, d), b in self.wire.up.items() if d == density}
-            if density is not None:
-                rec["uplink_density"] = density
         if self.eval_fn and self.round % self.scfg.eval_every == 0:
             rec.update(self.eval_fn(self.frozen, self.global_train))
         self.history.append(rec)

@@ -1,0 +1,110 @@
+"""Compile watchdog: ONE ``jax.monitoring`` backend-compile listener.
+
+Four copies of the same listener used to live in test_flat_codec.py,
+test_serve.py, test_streaming_agg.py and benchmarks/round_throughput.py
+— this module registers it once at import and exposes the count three
+ways:
+
+  * :func:`compile_count` — the monotonic process total;
+  * :class:`count_compiles` — ``with count_compiles() as c: ...;
+    c.count`` measurement context (what the tests and the bench use);
+  * :class:`CompileWatchdog` — an ENFORCING context: raises
+    :class:`CompileBudgetExceeded` when the block compiles more than
+    ``max_compiles`` programs. The serving engine
+    (``AdapterServingEngine(strict_compiles=True)``) and the streaming
+    accumulator (``StreamingFlatAccumulator(strict_compiles=True)``)
+    wrap their steady-state paths in a zero-budget watchdog, so the
+    zero-steady-state-compile invariant is a runtime guarantee, not
+    just a test assertion.
+
+Every compile also feeds the default metrics registry when it is
+enabled (``jax.backend_compiles`` counter, ``jax.backend_compile_secs``
+sum), so compile counts show up in the same metrics dump as bytes and
+staleness.
+
+The pytest fixture ``count_compiles_fixture`` (registered by
+tests/conftest.py) hands tests the context-manager class under the name
+``count_compiles``; the bench imports the class directly.
+"""
+from __future__ import annotations
+
+import jax
+
+from repro.obs import metrics as _metrics
+
+_EVENT = "/jax/core/compile/backend_compile_duration"
+_COMPILES = [0]
+
+
+def _on_event(event, duration, **kw):
+    if event == _EVENT:
+        _COMPILES[0] += 1
+        reg = _metrics.default_registry()
+        if reg.enabled:
+            reg.inc("jax.backend_compiles")
+            reg.inc("jax.backend_compile_secs", float(duration))
+
+
+# registered exactly once per process, at first import
+jax.monitoring.register_event_duration_secs_listener(_on_event)
+
+
+def compile_count() -> int:
+    """Monotonic count of backend compiles since process start."""
+    return _COMPILES[0]
+
+
+class count_compiles:
+    """``with count_compiles() as c: ...; c.count`` — programs compiled
+    inside the block (eager ops and jit cache misses both count)."""
+
+    def __enter__(self) -> "count_compiles":
+        self.start = _COMPILES[0]
+        return self
+
+    def __exit__(self, *exc) -> None:
+        self.count = _COMPILES[0] - self.start
+
+    @property
+    def so_far(self) -> int:
+        return _COMPILES[0] - self.start
+
+
+class CompileBudgetExceeded(RuntimeError):
+    """A watchdog-guarded block compiled more programs than allowed."""
+
+
+class CompileWatchdog(count_compiles):
+    """Enforcing variant of :class:`count_compiles`: on exit (without a
+    pending exception) raises :class:`CompileBudgetExceeded` when the
+    block compiled more than ``max_compiles`` programs.
+
+    >>> with CompileWatchdog(0, label="steady-state decode"):
+    ...     engine.step(x, cids)     # must re-dispatch compiled programs
+    """
+
+    def __init__(self, max_compiles: int = 0, label: str = ""):
+        self.max_compiles = int(max_compiles)
+        self.label = label
+
+    def __exit__(self, exc_type, *exc) -> None:
+        self.count = _COMPILES[0] - self.start
+        if exc_type is None and self.count > self.max_compiles:
+            what = f" [{self.label}]" if self.label else ""
+            raise CompileBudgetExceeded(
+                f"compile watchdog{what}: {self.count} backend "
+                f"compile(s) in a block budgeted for "
+                f"{self.max_compiles}")
+
+
+try:        # pragma: no cover - exercised through the test suite
+    import pytest
+
+    @pytest.fixture(name="count_compiles")
+    def count_compiles_fixture():
+        """The measurement context as a fixture: tests take
+        ``count_compiles`` as an argument and use it exactly like the
+        class (``with count_compiles() as c: ...``)."""
+        return count_compiles
+except ImportError:                       # bench runs without pytest
+    pass

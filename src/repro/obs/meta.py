@@ -1,0 +1,45 @@
+"""Bench run metadata: who/what produced a measurement.
+
+Every ``--json`` sweep written by ``benchmarks/round_throughput.py``
+carries a ``meta`` block from :func:`run_meta`, so
+``benchmarks/bench_compare.py`` can refuse to diff a CPU run against a
+TPU baseline (or jax versions apart) instead of reporting phantom
+regressions. The run id is random and HOSTNAME-FREE — the JSON is
+committed/uploaded, and machine names don't belong in the repo.
+"""
+from __future__ import annotations
+
+import platform
+import secrets
+
+import jax
+
+
+def run_meta() -> dict:
+    """Environment fingerprint of one benchmark run."""
+    dev = jax.devices()[0]
+    return {
+        "backend": jax.default_backend(),
+        "device_kind": str(getattr(dev, "device_kind", dev.platform)),
+        "n_devices": jax.device_count(),
+        "jax_version": jax.__version__,
+        "python_version": platform.python_version(),
+        # random, not host-derived: uploaded artifacts stay anonymous
+        "run_id": secrets.token_hex(8),
+    }
+
+
+# meta keys that must MATCH for two runs to be comparable; the rest
+# (n_devices, python patch level, run_id) only annotate
+COMPARABLE_KEYS = ("backend", "device_kind", "jax_version")
+
+
+def comparable(a: dict, b: dict) -> tuple[bool, list[str]]:
+    """Can run ``a`` be diffed against run ``b``? Returns (ok,
+    mismatched keys); missing meta on either side compares as unknown
+    (ok=True, caller warns)."""
+    if not a or not b:
+        return True, []
+    bad = [k for k in COMPARABLE_KEYS
+           if k in a and k in b and a[k] != b[k]]
+    return not bad, bad

@@ -45,6 +45,7 @@ from repro.core.flat import is_flat_message
 from repro.core.quant import QuantConfig
 from repro.fl.client import pow2_pad
 from repro.kernels import ref as kref
+from repro.obs import metrics as obsm
 
 Array = jax.Array
 
@@ -175,7 +176,8 @@ class AdapterCache:
     uncounted read the decode loop uses."""
 
     def __init__(self, capacity_bytes: int, qcfg: QuantConfig,
-                 policy: str = "lru"):
+                 policy: str = "lru",
+                 registry: Optional[obsm.MetricsRegistry] = None):
         if policy not in ("lru", "clock"):
             raise ValueError(f"unknown eviction policy: {policy!r}")
         if not qcfg.enabled:
@@ -184,6 +186,10 @@ class AdapterCache:
         self.capacity_bytes = int(capacity_bytes)
         self.qcfg = qcfg
         self.policy = policy
+        # metrics ride the obs registry (labeled by eviction policy);
+        # the plain-int attributes below stay the per-instance
+        # source of truth for stats()/hit_rate and remain resettable
+        self.registry = obsm.get_registry(registry)
         self._entries: "collections.OrderedDict[int, CacheEntry]" = \
             collections.OrderedDict()
         self._bytes = 0
@@ -224,8 +230,10 @@ class AdapterCache:
         e = self._entries.get(cid)
         if e is None:
             self.misses += 1
+            self.registry.inc("serve.cache.misses", policy=self.policy)
             return None
         self.hits += 1
+        self.registry.inc("serve.cache.hits", policy=self.policy)
         self._touch(e)
         return e
 
@@ -246,11 +254,15 @@ class AdapterCache:
         if cid not in self._entries:
             raise KeyError(f"cannot pin uncached client {cid}")
         self._pins[cid] += 1
+        self.registry.inc("serve.cache.pins")
+        self.registry.set("serve.cache.pinned", len(self._pins))
 
     def unpin(self, cid: int) -> None:
         self._pins[cid] -= 1
         if self._pins[cid] <= 0:
             del self._pins[cid]
+        self.registry.inc("serve.cache.unpins")
+        self.registry.set("serve.cache.pinned", len(self._pins))
 
     def _pinned(self, cid: int) -> bool:
         return self._pins.get(cid, 0) > 0
@@ -270,9 +282,12 @@ class AdapterCache:
         self._entries[cid] = e
         self._bytes += nbytes
         self.version += 1
+        self.registry.inc("serve.cache.puts", rank=rank)
+        self.registry.inc("serve.cache.put_bytes", nbytes, rank=rank)
         while self._bytes > self.capacity_bytes and len(self._entries) > 1:
             if not self._evict_one(keep=cid):
                 break       # everything pinned: run over budget briefly
+        self._gauges()
         return e
 
     def _evict_one(self, keep: int) -> bool:
@@ -297,7 +312,12 @@ class AdapterCache:
         self._bytes -= self._entries.pop(victim).nbytes
         self.evictions += 1
         self.version += 1
+        self.registry.inc("serve.cache.evictions", policy=self.policy)
         return True
+
+    def _gauges(self) -> None:
+        self.registry.set("serve.cache.bytes", self._bytes)
+        self.registry.set("serve.cache.entries", len(self._entries))
 
     # -- host -> device staging --------------------------------------------
 

@@ -42,6 +42,8 @@ from repro.core.quant import QuantConfig
 from repro.fl.client import pow2_pad
 from repro.kernels import ops as kops
 from repro.kernels import ref as kref
+from repro.obs import trace as obst
+from repro.obs.compile import CompileWatchdog
 from repro.serve.cache import AdapterCache, StagedBucket, StagedLayer
 
 Array = jax.Array
@@ -80,7 +82,9 @@ class AdapterServingEngine:
     def __init__(self, weights: Sequence[Array], scale: float,
                  qcfg: QuantConfig, cache: AdapterCache,
                  fetch: Optional[Callable[[int], Any]] = None,
-                 path: str = "fused", slab_slots: int = 8):
+                 path: str = "fused", slab_slots: int = 8,
+                 strict_compiles: bool = False,
+                 tracer: Optional[obst.Tracer] = None):
         if path not in PATHS:
             raise ValueError(f"path must be one of {PATHS}: {path!r}")
         self.weights = tuple(jnp.asarray(w, jnp.float32) for w in weights)
@@ -96,6 +100,13 @@ class AdapterServingEngine:
         # staged slabs memo: bucket rank -> ((cids key, cache version),
         # StagedBucket); restages only when the working set changes
         self._staged: dict[int, tuple[tuple, StagedBucket]] = {}
+        # opt-in runtime enforcement of the 0-steady-state-compile
+        # contract: once a step SHAPE (batch rows x per-bucket split x
+        # slab slots x path) has run, re-running it must compile
+        # nothing — a retrace raises obs.CompileBudgetExceeded
+        self.strict_compiles = bool(strict_compiles)
+        self._warm_shapes: set[tuple] = set()
+        self.tracer = obst.get_tracer(tracer)
 
     # -- admission (counted cache traffic) ----------------------------------
 
@@ -127,10 +138,31 @@ class AdapterServingEngine:
             if e is None:
                 raise KeyError(f"client {cid} not cached — admit() first")
             groups.setdefault(pow2_pad(e.rank), []).append(row)
+        # staging first (slab growth/restage MAY compile — it is not
+        # steady state); the compute below is watchdogged by shape
+        staged_by = {rb: self._staged_for(rb, [cids[r] for r in rows])
+                     for rb, rows in sorted(groups.items())}
+        shape_key = (x.shape[0], self.path, tuple(
+            (rb, len(rows), staged_by[rb].n_slots)
+            for rb, rows in sorted(groups.items())))
+        with self.tracer.span("serve/step", batch=len(cids),
+                              buckets=len(groups), path=self.path):
+            if self.strict_compiles and shape_key in self._warm_shapes:
+                with CompileWatchdog(0, label="steady-state decode "
+                                              f"{shape_key}"):
+                    y = self._compute(x, cids, groups, staged_by)
+            else:
+                y = self._compute(x, cids, groups, staged_by)
+                self._warm_shapes.add(shape_key)
+        return y
+
+    def _compute(self, x: Array, cids: list[int],
+                 groups: dict[int, list[int]],
+                 staged_by: dict[int, StagedBucket]) -> Array:
         n_out = self.weights[-1].shape[1]
         y = jnp.zeros((len(cids), n_out), jnp.float32)
         for rb, rows in sorted(groups.items()):
-            staged = self._staged_for(rb, [cids[r] for r in rows])
+            staged = staged_by[rb]
             yb = self._bucket_step(
                 x[jnp.asarray(rows)], staged,
                 [staged.slots[cids[r]] for r in rows])

@@ -30,6 +30,8 @@ import numpy as np
 from repro.core import messages
 from repro.core.quant import QuantConfig
 from repro.fl.traces import LognormalLatency
+from repro.obs import metrics as obsm
+from repro.obs import trace as obst
 from repro.serve.cache import wire_bytes_of
 from repro.serve.engine import AdapterServingEngine
 
@@ -138,8 +140,17 @@ def _draw_requests(store: AdapterStore, wl: WorkloadConfig) -> list[_Req]:
 
 
 def simulate(engine: AdapterServingEngine, store: AdapterStore,
-             wl: WorkloadConfig, warmup: bool = True) -> dict:
-    """Run the workload through the engine; returns measured stats."""
+             wl: WorkloadConfig, warmup: bool = True,
+             registry: Optional[obsm.MetricsRegistry] = None,
+             tracer: Optional[obst.Tracer] = None) -> dict:
+    """Run the workload through the engine; returns measured stats.
+
+    Admission and queue-depth telemetry rides the obs registry
+    (``serve.sim.*`` counters/histograms), and each decode step plus
+    each request's admit->done lifetime lands on the tracer as a
+    VIRTUAL-TIME span (``ts`` = the simulator clock)."""
+    reg = obsm.get_registry(registry)
+    tr = obst.get_tracer(tracer)
     if engine.fetch is None:
         engine.fetch = store.fetch
     d_in = int(engine.weights[0].shape[0])
@@ -186,15 +197,27 @@ def simulate(engine: AdapterServingEngine, store: AdapterStore,
         while pending and pending[0].t_arrive <= clock \
                 and len(admitted) < wl.max_active:
             r = pending.pop(0)
-            if engine.admit([r.cid]):
+            missed = engine.admit([r.cid])
+            reg.inc("serve.sim.admissions", hit=not missed)
+            if missed:
                 frng = np.random.default_rng(
                     [wl.seed, TAG_FETCH, r.cid, r.idx])
-                r.ready = clock + FETCH_LATENCY.sample(
+                fetch_s = FETCH_LATENCY.sample(
                     frng, store.rank_of(r.cid), store.bytes_of(r.cid))
+                r.ready = clock + fetch_s
+                reg.inc("serve.sim.fetch_bytes", store.bytes_of(r.cid))
+                tr.event("serve/fetch", ts=clock, dur=fetch_s,
+                         track="serve/fetch", cid=r.cid)
             else:
                 r.ready = clock
             engine.cache.pin(r.cid)     # in-flight: evictable at done
             admitted.append(r)
+        # queue depth at every scheduling decision: requests arrived
+        # but not yet admitted (waiting on the max_active cap), plus
+        # the admitted-but-running population
+        n_waiting = sum(1 for p in pending if p.t_arrive <= clock)
+        reg.observe("serve.sim.queue_depth", n_waiting)
+        reg.observe("serve.sim.active", len(admitted))
         runnable = [r for r in admitted if r.ready <= clock][:wl.max_batch]
         if not runnable:
             # idle: fast-forward the clock to the next event (the next
@@ -207,8 +230,13 @@ def simulate(engine: AdapterServingEngine, store: AdapterStore,
         rows = jnp.asarray(xs[[r.idx for r in runnable]])
         t0 = time.perf_counter()
         jax.block_until_ready(engine.step(rows, [r.cid for r in runnable]))
-        clock += time.perf_counter() - t0
+        dt = time.perf_counter() - t0
+        tr.event("serve/decode_step", ts=clock, dur=dt,
+                 track="serve/steps", rows=len(runnable),
+                 path=engine.path)
+        clock += dt
         steps += 1
+        reg.observe("serve.sim.batch_rows", len(runnable))
         for r in runnable:
             r.left -= 1
             if r.left == 0:
@@ -216,6 +244,10 @@ def simulate(engine: AdapterServingEngine, store: AdapterStore,
                 engine.cache.unpin(r.cid)
                 admitted.remove(r)
                 done.append(r)
+                reg.inc("serve.sim.requests_done")
+                tr.event("serve/request", ts=r.t_arrive,
+                         dur=r.t_done - r.t_arrive,
+                         track="serve/requests", cid=r.cid)
 
     lat_ms = np.asarray(
         sorted(1e3 * (r.t_done - r.t_arrive) for r in done))

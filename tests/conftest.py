@@ -8,3 +8,7 @@ sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
 import jax  # noqa: E402
 
 jax.config.update("jax_enable_x64", False)
+
+# the shared backend-compile counter fixture (``count_compiles``): any
+# test may take it as an argument instead of importing repro.obs.compile
+from repro.obs.compile import count_compiles_fixture  # noqa: E402,F401

@@ -28,33 +28,10 @@ from repro.core.flocora import FLoCoRAConfig
 from repro.core.quant import QuantConfig
 from repro.kernels import ref as kref
 
-# -- backend-compile counter (the dispatch-count hook) ----------------------
-
-_COMPILES = [0]
-
-
-def _on_event(event, duration, **kw):
-    if event == "/jax/core/compile/backend_compile_duration":
-        _COMPILES[0] += 1
-
-
-jax.monitoring.register_event_duration_secs_listener(_on_event)
-
-
-class count_compiles:
-    """``with count_compiles() as c: ...; c.count`` — programs compiled
-    inside the block (eager ops and jit cache misses both count)."""
-
-    def __enter__(self):
-        self.start = _COMPILES[0]
-        return self
-
-    def __exit__(self, *a):
-        self.count = _COMPILES[0] - self.start
-
-    @property
-    def so_far(self):
-        return _COMPILES[0] - self.start
+# backend-compile counter: the process-wide jax.monitoring hook lives in
+# repro.obs.compile; the ``count_compiles`` fixture (tests/conftest.py)
+# hands tests the context-manager class
+from repro.obs.compile import count_compiles  # noqa: E402
 
 
 def _tree(key, scale=1.0):

@@ -34,26 +34,8 @@ from repro.kernels.ops import (_multi_lora_matmul_jnp,
                                _multi_lora_matmul_q_jnp)
 from repro import serve
 
-# -- backend-compile counter (the dispatch-count hook) ----------------------
-
-_COMPILES = [0]
-
-
-def _on_event(event, duration, **kw):
-    if event == "/jax/core/compile/backend_compile_duration":
-        _COMPILES[0] += 1
-
-
-jax.monitoring.register_event_duration_secs_listener(_on_event)
-
-
-class count_compiles:
-    def __enter__(self):
-        self.start = _COMPILES[0]
-        return self
-
-    def __exit__(self, *a):
-        self.count = _COMPILES[0] - self.start
+# backend-compile counter: shared process-wide hook in repro.obs.compile
+from repro.obs.compile import count_compiles  # noqa: E402
 
 
 # -- helpers ----------------------------------------------------------------

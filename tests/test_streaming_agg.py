@@ -45,17 +45,8 @@ from repro.kernels.dequant_agg import dequant_agg_rows_pallas, \
 
 SRC = os.path.join(os.path.dirname(__file__), "..", "src")
 
-# -- backend-compile counter (same hook as test_flat_codec) -----------------
-
-_COMPILES = [0]
-
-
-def _on_event(event, duration, **kw):
-    if event == "/jax/core/compile/backend_compile_duration":
-        _COMPILES[0] += 1
-
-
-jax.monitoring.register_event_duration_secs_listener(_on_event)
+# backend-compile counter: shared process-wide hook in repro.obs.compile
+from repro.obs.compile import count_compiles  # noqa: E402
 
 
 def _tree(seed: int, rank: int = 8, scale: float = 1.0):
@@ -217,11 +208,11 @@ def test_streaming_folds_compile_zero_programs():
     agg = FedBuffAggregator(streaming=True)
     agg.add(msgs[0], 1.0, 0.0)            # compiles the fold program
     jax.block_until_ready(next(iter(agg.streams.values())).acc)
-    n0 = _COMPILES[0]
-    for i, m in enumerate(msgs[1:]):
-        agg.add(m, 3.0 + i, float(i % 3))
-    jax.block_until_ready(next(iter(agg.streams.values())).acc)
-    assert _COMPILES[0] - n0 == 0
+    with count_compiles() as c:
+        for i, m in enumerate(msgs[1:]):
+            agg.add(m, 3.0 + i, float(i % 3))
+        jax.block_until_ready(next(iter(agg.streams.values())).acc)
+    assert c.count == 0
     assert agg.buffered == 6
 
 
