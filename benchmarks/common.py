@@ -36,7 +36,7 @@ def fl_experiment(arch: str = "resnet8", rank: int = 32,
                   local_epochs: int = 1, seed: int = 0,
                   stem_mode: str = "dense", fc_mode: str = "dense",
                   norms_trained: bool = True, eval_every: int = 2,
-                  error_feedback: bool = False) -> dict:
+                  error_feedback: bool = False, dp=None) -> dict:
     """One FL run on the synthetic vision task; returns history + TCC."""
     rng = np.random.default_rng(seed)
     sv = SyntheticVision(seed=0)
@@ -67,7 +67,7 @@ def fl_experiment(arch: str = "resnet8", rank: int = 32,
         ClientConfig(local_epochs=local_epochs, batch_size=32, lr=0.01,
                      momentum=0.9),
         FLoCoRAConfig(rank=rank, alpha=a, quant_bits=quant_bits,
-                      error_feedback=error_feedback),
+                      error_feedback=error_feedback, dp=dp),
         eval_fn)
     hist = srv.run()
     accs = [h["test_acc"] for h in hist if "test_acc" in h]

@@ -48,6 +48,17 @@ initializes), and the streaming FedBuff per-arrival fold at
 buffer_size in {10, 100, 1000} (asserting per-fold cost stays flat,
 max/min <= 1.2, and steady-state folds compile 0 new programs).
 
+``--fleet`` is the MILLION-CLIENT fleet-realism sweep (BENCH_9.json): a
+lazy three-tier :class:`~repro.fl.population.Population` (diurnal
+churning phones / laptops / workstations, per-cid shards generated on
+demand behind a bounded LRU) drives the async FedBuff engine at its
+millions-of-clients operating point — asserting peak resident
+per-client state stays within the cache bound, reporting virtual time
+and bytes to a target loss, realized churn rate and wasted bytes, then
+re-running with DP-noised uplinks (clip + Gaussian before quantization)
+and reporting the spent epsilon plus the quickstart-model accuracy
+delta (asserted < 1%).
+
 ``--serve`` sweeps the MULTI-TENANT SERVING engine (src/repro/serve/,
 BENCH_7.json): a 1024-adapter wire-format cache over 2 rank buckets
 (4, 8), steady-state decode-step wall time for the fused
@@ -724,6 +735,161 @@ def run_serve(iters: int = 3) -> list[dict]:
     return rows
 
 
+def run_fleet(n_clients: int = 1_000_000, arrivals: int = 600,
+              dp_rounds: int = 4) -> list[dict]:
+    """A day in the life of a fleet (BENCH_9.json): FedBuff's
+    millions-of-clients operating point on a lazy :class:`Population`.
+
+    A 1M-device three-tier fleet (70% diurnal rank-4 phones that churn,
+    25% rank-8 laptops, 5% always-on rank-16 workstations) feeds the
+    event-driven async engine with buffers of K=10 — per-client shards
+    generate on demand (``data.synthetic.linear_shard`` keyed
+    ``(seed, cid)``) behind a bounded LRU, so peak resident per-client
+    state is O(active clients), asserted here against the cache bound.
+    Reports wall-clock arrival throughput, virtual time + total bytes to
+    a target loss, the realized churn rate, and the wasted (churned)
+    bytes. A second pass runs the same fleet with a DP-noised uplink
+    (clip + Gaussian BEFORE quantization) and reports the spent epsilon;
+    the quickstart-model accuracy delta at that operating point rides
+    ``benchmarks.common.fl_experiment(dp=...)``.
+    """
+    from repro.core.lora import linear_apply, linear_init
+    from repro.core.quant import DPConfig
+    from repro.data.synthetic import linear_shard
+    from repro.fl import AsyncConfig, AsyncFLServer, DeviceTier, \
+        Population, PopulationTrace, time_to_target
+
+    D, C, RANK = 16, 10, 16
+    TARGET_LOSS = 1.0
+    CACHE = 256
+
+    def fleet_model():
+        k = jax.random.PRNGKey(0)
+        fz, tr = linear_init(k, D, C, "lora",
+                             LoRAConfig(rank=RANK, alpha=float(RANK)),
+                             base_dtype=jnp.float32)
+        return {"frozen": {"lin": fz},
+                "train": {"lin": tr, "bias": jnp.zeros((C,))}}
+
+    def fleet_loss(frozen, train, batch):
+        logits = linear_apply(frozen["lin"], train["lin"], batch["x"],
+                              1.0, jnp.float32) + train["bias"]
+        logp = jax.nn.log_softmax(logits)
+        return -jnp.mean(jnp.take_along_axis(
+            logp, batch["y"][:, None], axis=1)), {}
+
+    tiers = (DeviceTier("phone", rank=4, fraction=0.70, p_churn=0.08,
+                        period_s=86400.0, duty=0.4),
+             DeviceTier("laptop", rank=8, fraction=0.25, p_churn=0.03,
+                        period_s=86400.0, duty=0.7),
+             DeviceTier("workstation", rank=RANK, fraction=0.05))
+
+    def build(dp=None):
+        pop = Population(
+            n_clients, tiers=tiers, seed=0, shard_size=24,
+            shard_fn=lambda s, c: linear_shard(s, c, n=24, d=D),
+            cache_clients=CACHE)
+        acfg = AsyncConfig(total_arrivals=arrivals, concurrency=64,
+                           buffer_size=10, streaming_agg=True,
+                           microbatch_window=1200.0, seed=0)
+        fcfg = FLoCoRAConfig(rank=RANK, alpha=float(RANK), quant_bits=8,
+                             dp=dp)
+        eng = AsyncFLServer(fleet_model(), fleet_loss, pop, acfg,
+                            ClientConfig(local_epochs=2, batch_size=8,
+                                         lr=0.1),
+                            fcfg, trace=PopulationTrace(seed=0,
+                                                        population=pop))
+        return pop, eng
+
+    rows = []
+    pop, eng = build()
+    print(f"# fleet: {n_clients} clients, {arrivals} arrivals ...",
+          flush=True)
+    t0 = time.perf_counter()
+    hist = eng.run()
+    dt = time.perf_counter() - t0
+    print(f"# fleet: base pass done in {dt:.1f}s "
+          f"(loss {hist[-1]['client_loss']:.3f})", flush=True)
+    # the acceptance invariant: a 1M fleet never materializes more than
+    # the LRU bound of per-client shards
+    assert pop.peak_resident <= CACHE, \
+        f"peak resident {pop.peak_resident} exceeds cache bound {CACHE}"
+    last = hist[-1]
+    rows.append(row(f"fleet/fedbuff_{n_clients}c", dt * 1e6,
+                    arrivals=last["n_arrived"],
+                    arrivals_per_sec=last["n_arrived"] / dt,
+                    versions=eng.version,
+                    n_churned=last["n_churned"],
+                    churn_rate=last["n_churned"]
+                    / max(eng.n_dispatched, 1),
+                    peak_resident=pop.peak_resident,
+                    cache_clients=CACHE,
+                    virtual_s=last["t_virtual"],
+                    tcc_bytes=last["tcc_bytes"],
+                    wasted_bytes=last["wasted_bytes"],
+                    final_loss=last["client_loss"]))
+    tt = time_to_target(hist, "client_loss", TARGET_LOSS)
+    assert tt is not None, \
+        f"fleet run never reached loss {TARGET_LOSS}: " \
+        f"{last['client_loss']}"
+    rows.append(row("fleet/time_to_target",
+                    target_loss=TARGET_LOSS,
+                    virtual_s=tt["t_virtual"],
+                    tcc_bytes=tt["tcc_bytes"],
+                    version=tt["version"]))
+    step = max(1, len(hist) // 8)
+    for h in hist[::step]:
+        rows.append(row(f"fleet/v{h['version']}",
+                        virtual_s=h["t_virtual"],
+                        tcc_bytes=h["tcc_bytes"],
+                        loss=h["client_loss"],
+                        staleness_mean=h["staleness_mean"]))
+
+    # -- the same fleet with DP uplinks -------------------------------------
+    dp = DPConfig(clip_norm=1.0, noise_multiplier=0.3)
+    _, eng_dp = build(dp=dp)
+    hist_dp = eng_dp.run()
+    last_dp = hist_dp[-1]
+    print(f"# fleet: DP pass done (eps {last_dp['dp_epsilon']:.2f})",
+          flush=True)
+    rows.append(row("fleet/fedbuff_dp",
+                    noise_multiplier=dp.noise_multiplier,
+                    clip_norm=dp.clip_norm,
+                    dp_epsilon=last_dp["dp_epsilon"],
+                    final_loss=last_dp["client_loss"],
+                    loss_delta=last_dp["client_loss"]
+                    - last["client_loss"]))
+
+    # -- quickstart-model accuracy at the DP operating point ----------------
+    # the quickstart ResNet stage is compile-dominated on small boxes:
+    # a handful of rounds is enough to separate a harmful noise level
+    # from a benign one, so dp_rounds stays small by default
+    from benchmarks.common import fl_experiment
+    print(f"# fleet: quickstart DP check ({dp_rounds} rounds x2, "
+          "compile-heavy) ...", flush=True)
+    base = fl_experiment(rounds=dp_rounds, n_clients=20,
+                         clients_per_round=5, n_train=1000, rank=16,
+                         quant_bits=8, eval_every=dp_rounds)
+    print(f"# fleet: no-DP quickstart acc {base['final_acc']:.3f}",
+          flush=True)
+    priv = fl_experiment(rounds=dp_rounds, n_clients=20,
+                         clients_per_round=5, n_train=1000, rank=16,
+                         quant_bits=8, dp=dp, eval_every=dp_rounds)
+    print(f"# fleet: DP quickstart acc {priv['final_acc']:.3f}",
+          flush=True)
+    delta = priv["final_acc"] - base["final_acc"]
+    eps = [h["dp_epsilon"] for h in priv["history"]
+           if "dp_epsilon" in h][-1]
+    rows.append(row("fleet/quickstart_dp_acc",
+                    acc_nodp=base["final_acc"],
+                    acc_dp=priv["final_acc"],
+                    acc_delta=delta,
+                    dp_epsilon=eps))
+    assert abs(delta) < 0.01, \
+        f"DP accuracy delta {delta:+.4f} exceeds 1% at eps={eps:.1f}"
+    return rows
+
+
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--clients", type=int, default=6)
@@ -750,6 +916,14 @@ def main() -> None:
                          "(BENCH_7)")
     ap.add_argument("--arrivals", type=int, default=12,
                     help="virtual arrivals for the --async sweep")
+    ap.add_argument("--fleet", action="store_true",
+                    help="million-client lazy-Population FedBuff sweep: "
+                         "churn, deadline arrivals, DP uplinks, "
+                         "time-to-target-loss (BENCH_9)")
+    ap.add_argument("--fleet-clients", type=int, default=1_000_000,
+                    help="fleet size for the --fleet sweep")
+    ap.add_argument("--fleet-arrivals", type=int, default=600,
+                    help="buffered arrivals for the --fleet sweep")
     ap.add_argument("--json", type=str, default=None, metavar="PATH",
                     help="also write the sweep rows as JSON to PATH")
     args = ap.parse_args()
@@ -757,7 +931,12 @@ def main() -> None:
         ap.error("--clients/--samples/--iters must be >= 1")
     if args.arrivals < 1:
         ap.error("--arrivals must be >= 1")
-    if args.serve:
+    if args.fleet_clients < 1 or args.fleet_arrivals < 1:
+        ap.error("--fleet-clients/--fleet-arrivals must be >= 1")
+    if args.fleet:
+        sweep = "fleet"
+        rows = run_fleet(args.fleet_clients, args.fleet_arrivals)
+    elif args.serve:
         sweep = "serve"
         rows = run_serve(args.iters)
     elif args.agg_scale:
@@ -794,6 +973,8 @@ def main() -> None:
                                 "samples": args.samples,
                                 "iters": args.iters,
                                 "arrivals": args.arrivals,
+                                "fleet_clients": args.fleet_clients,
+                                "fleet_arrivals": args.fleet_arrivals,
                                 "rank_profile": args.rank_profile},
                        # backend/device/version provenance: the compare
                        # gate refuses cross-backend baselines on this

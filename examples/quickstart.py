@@ -22,8 +22,16 @@ quantize to 4 bits, and error feedback re-ships each round's dropped
 mass — prints fp32 vs int4 vs int4+10% message sizes and the asymmetric
 down/up byte trajectory.
 
+``--dp [NOISE]`` privatizes the uniform quickstart's uplinks: each
+client's adapter delta is clipped to L2 norm 1 and Gaussian-noised at
+``NOISE`` x clip (default 0.3) BEFORE int8 quantization
+(core/quant.DPConfig — quantization is post-processing, so the wire is
+already private), and every round's history row carries the cumulative
+``dp_epsilon`` spent.
+
     PYTHONPATH=src python examples/quickstart.py [--rounds 10] \
-        [--hetero | --async [--arrivals 90] | --sparse [--density 0.1]]
+        [--hetero | --async [--arrivals 90] | --sparse [--density 0.1] \
+         | --dp [0.3]]
 """
 import argparse
 import sys
@@ -42,7 +50,7 @@ from repro.fl import ClientConfig, FLServer, ServerConfig
 from repro.models.resnet import ResNetConfig, init as resnet_init, loss_fn
 
 
-def run_uniform(rounds: int):
+def run_uniform(rounds: int, dp_noise=None):
     # data: 20 clients worth of non-IID (LDA 0.5) synthetic images
     rng = np.random.default_rng(0)
     sv = SyntheticVision(seed=0)
@@ -65,11 +73,17 @@ def run_uniform(rounds: int):
           f"{flocora_bytes/1e6:.3f} MB "
           f"({fedavg_bytes/flocora_bytes:.1f}x smaller)")
 
+    dp = None
+    if dp_noise is not None:
+        from repro.core.quant import DPConfig
+        dp = DPConfig(clip_norm=1.0, noise_multiplier=dp_noise)
+        print(f"dp: clip L2 to {dp.clip_norm}, noise {dp.noise_multiplier}"
+              f" x clip before int8 quantization (delta={dp.delta:g})")
     server = FLServer(
         model, lambda f, t, b: loss_fn(f, t, cfg, b), data,
         ServerConfig(rounds=rounds, n_clients=20, clients_per_round=5),
         ClientConfig(local_epochs=1, batch_size=32, lr=0.01),
-        FLoCoRAConfig(rank=32, alpha=512.0, quant_bits=8))
+        FLoCoRAConfig(rank=32, alpha=512.0, quant_bits=8, dp=dp))
     for h in server.run():
         print(h)
 
@@ -220,6 +234,10 @@ def main():
                     help="async: total virtual arrivals")
     ap.add_argument("--buffer", type=int, default=6,
                     help="async: FedBuff buffer size")
+    ap.add_argument("--dp", type=float, nargs="?", const=0.3,
+                    default=None, metavar="NOISE",
+                    help="uniform quickstart with DP uplinks: clip + "
+                         "Gaussian noise at NOISE x clip (default 0.3)")
     args = ap.parse_args()
     if args.sparse and not 0.0 < args.density <= 1.0:
         ap.error("--density must be in (0, 1]")
@@ -230,7 +248,7 @@ def main():
     elif args.hetero:
         run_hetero(args.rounds)
     else:
-        run_uniform(args.rounds)
+        run_uniform(args.rounds, dp_noise=args.dp)
 
 
 if __name__ == "__main__":

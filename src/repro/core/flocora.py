@@ -20,7 +20,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.core import aggregation, lora, messages
-from repro.core.quant import QuantConfig
+from repro.core.quant import DPConfig, QuantConfig, dp_privatize
 from repro.core.sparse import SparsityConfig
 
 Array = jax.Array
@@ -114,8 +114,19 @@ class FLoCoRAConfig:
     # DENSE quantized message in one fused kernel launch. Byte-identical
     # wire payloads; False selects the per-leaf oracle codec.
     flat_wire: bool = True
+    # differential privacy on the uplink: clip the client's update DELTA
+    # and add Gaussian noise BEFORE quantization (None = no DP, the
+    # paper's setting). See core/quant.DPConfig.
+    dp: Optional[DPConfig] = None
 
     def __post_init__(self):
+        if self.dp is not None and self.dp.noise_multiplier > 0 \
+                and self.error_feedback:
+            raise ValueError(
+                "dp noise and error_feedback are incompatible: the EF "
+                "residual would accumulate (and compensate away) the DP "
+                "noise across rounds, silently voiding the privacy "
+                "guarantee")
         if self.rank_schedule is not None \
                 and self.rank_schedule.max_rank > self.rank:
             raise ValueError(
@@ -177,17 +188,38 @@ def broadcast(global_trainable: Any, cfg: FLoCoRAConfig,
 
 def client_uplink(trainable: Any, cfg: FLoCoRAConfig,
                   ef_residual: Optional[Any] = None,
-                  rnd: int = 0) -> tuple[Any, Optional[Any]]:
+                  rnd: int = 0, start: Optional[Any] = None,
+                  dp_key: Optional[tuple] = None,
+                  dp_seed: int = 0) -> tuple[Any, Optional[Any]]:
     """Step (3): one client's WIRE message (packed payloads when
     quantization is on, sparse top-k payloads when a ``sparsity``
     profile is set — ``rnd`` resolves the annealed density; the raw fp
     tree otherwise).
+
+    With ``cfg.dp`` set, the client's update DELTA (``trainable -
+    start``; ``start=None`` treats the base as zero) is clipped and
+    Gaussian-noised BEFORE quantization — the wire carries
+    ``start + privatized_delta``, so FedAvg over messages equals the
+    global tree plus the mean privatized delta (``start`` is the public
+    broadcast; adding it back is post-processing). ``dp_key`` keys the
+    noise draw (defaults to ``(rnd,)``; pass dispatch-unique ids in
+    async so two concurrent dispatches of one client never share
+    noise); ``dp_seed`` is the engine seed.
 
     With error feedback enabled, the client compensates its own previous
     compression error — quantization noise AND top-k-dropped mass
     (beyond-paper option; REQUIRED by default for sparse uplinks); pass
     the stored residual (``None`` initializes a zero residual). Returns
     (message, residual)."""
+    if cfg.dp is not None:
+        key = dp_key if dp_key is not None else (rnd,)
+        if start is not None:
+            delta = jax.tree_util.tree_map(jnp.subtract, trainable, start)
+            priv = dp_privatize(delta, cfg.dp, seed=dp_seed, key=key)
+            trainable = jax.tree_util.tree_map(jnp.add, start, priv)
+        else:
+            trainable = dp_privatize(trainable, cfg.dp, seed=dp_seed,
+                                     key=key)
     density = cfg.uplink_density(rnd)
     wire_on = cfg.qcfg.enabled or (density is not None and density < 1.0)
     if cfg.error_feedback and wire_on:

@@ -1,3 +1,3 @@
-from repro.data.synthetic import SyntheticVision, synthetic_lm_batch, \
-    markov_lm_batch
+from repro.data.synthetic import SyntheticVision, client_shard, \
+    linear_shard, markov_lm_batch, synthetic_lm_batch
 from repro.data.partition import lda_partition

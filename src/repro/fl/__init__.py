@@ -6,4 +6,6 @@ from repro.fl.async_engine import AsyncConfig, AsyncFLServer, \
     time_to_target
 from repro.fl.traces import AvailabilityWindows, FleetTrace, \
     LognormalLatency
+from repro.fl.population import DeviceTier, Population, PopulationTrace, \
+    default_tiers
 from repro.fl.elastic import elastic_restore

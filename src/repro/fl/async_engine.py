@@ -71,6 +71,7 @@ from repro.checkpoint import CheckpointManager, latest_step, restore
 from repro.core import flocora, lora
 from repro.core.aggregation import FedBuffAggregator
 from repro.core.flocora import FLoCoRAConfig
+from repro.core.quant import gaussian_epsilon
 from repro.fl.client import ClientConfig, cohort_steps, natural_steps, \
     make_staggered_cohort_trainer, pad_cohort_batches, pow2_pad, \
     stack_local_batches
@@ -128,9 +129,16 @@ class _InFlight:
     t_dispatch: float
     t_arrival: float
     n_k: int              # client sample count (aggregation weight)
-    start: Any            # broadcast fp tree at `rank`
+    start: Any            # broadcast fp tree at `rank` (None if dropped)
     msg: Any = None       # computed packed uplink (micro-batch cache)
     loss: float = float("nan")
+    # CHURN: decided at dispatch from the trace (keyed (seed, cid,
+    # dispatch_idx), so it replays on resume). A dropped dispatch never
+    # trains and never buffers — its downlink bytes were wasted, and the
+    # server notices at t_arrival (the deadline a live client would
+    # have hit), dispatching a replacement
+    dropped: bool = False
+    down: int = 0         # downlink bytes spent at dispatch
 
 
 def time_to_target(history: list[dict], key: str, target: float,
@@ -196,6 +204,16 @@ class AsyncFLServer:
             raise ValueError(
                 f"rank_schedule covers {sched.n_clients} clients, fleet "
                 f"has {len(client_data)}")
+        # lazy Population fleets (duck-typed: rank_for/sample_cid/
+        # schedule_steps/shard_size) carry their own rank tiers; an
+        # explicit RankSchedule overrides
+        self._pop = client_data \
+            if hasattr(client_data, "sample_cid") else None
+        if self._pop is not None and sched is None \
+                and self._pop.max_rank > fcfg.rank:
+            raise ValueError(
+                f"population max tier rank {self._pop.max_rank} "
+                f"exceeds the server rank {fcfg.rank}")
         if aggregator is None:
             aggregator = FedBuffAggregator()
         if not isinstance(aggregator, FedBuffAggregator):
@@ -227,14 +245,22 @@ class AsyncFLServer:
         self.trainer = trainer if trainer is not None \
             else make_staggered_cohort_trainer(loss_fn, ccfg)
         # fixed schedule length across the fleet: the staggered cohort
-        # program's (steps, B) never changes, only (rank, pow2 K) retrace
-        self.schedule_steps = cohort_steps(client_data, ccfg)
-        self.wire = WireAccounting(fcfg, registry=self.registry)
+        # program's (steps, B) never changes, only (rank, pow2 K)
+        # retrace. A Population knows its schedule in O(1); the eager
+        # path scans the materialized shards.
+        self.schedule_steps = client_data.schedule_steps(ccfg) \
+            if self._pop is not None else cohort_steps(client_data, ccfg)
+        hetero = self._pop is not None and sched is None \
+            and self._pop.mixed_ranks
+        self.wire = WireAccounting(fcfg, registry=self.registry,
+                                   hetero=hetero)
         # -- simulation state (everything below round-trips checkpoints)
         self.clock = 0.0
         self.version = 0
         self.n_dispatched = 0
         self.n_arrived = 0
+        self.n_churned = 0
+        self._wasted_cum = 0
         self.n_flushes = 0
         self.inflight: dict[int, _InFlight] = {}   # dispatch_idx -> rec
         self.heap: list[tuple[float, int]] = []    # (t_arrival, idx)
@@ -263,9 +289,11 @@ class AsyncFLServer:
 
     def _rank_for(self, cid: int) -> int:
         sched = self.fcfg.rank_schedule
-        if sched is None:
-            return self.fcfg.rank
-        return sched.rank_for(cid, self.version)   # versions anneal
+        if sched is not None:
+            return sched.rank_for(cid, self.version)   # versions anneal
+        if self._pop is not None:
+            return self._pop.rank_for(cid)             # device tier
+        return self.fcfg.rank
 
     @property
     def tcc_bytes(self) -> int:
@@ -273,40 +301,71 @@ class AsyncFLServer:
         return self.initial_model_bytes + self._down_cum + self._up_cum
 
     # -- dispatch -----------------------------------------------------------
-    def _dispatch_one(self) -> bool:
-        """Sample an idle client, broadcast, schedule its arrival."""
-        busy = {f.cid for f in self.inflight.values()}
+    def _sample_cid(self, idx: int, busy: set) -> Optional[int]:
+        """One dispatch candidate. A lazy Population rejection-samples
+        against the (O(concurrency)) busy set — never enumerating the
+        fleet; eager list fleets keep the explicit free-list draw."""
+        if self._pop is not None:
+            return self._pop.sample_cid(self._rng(TAG_SAMPLE, idx), busy)
         free = [c for c in range(len(self.client_data)) if c not in busy]
         if not free:
-            return False
+            return None
+        return int(free[self._rng(TAG_SAMPLE, idx).integers(len(free))])
+
+    def _dispatch_one(self) -> bool:
+        """Sample an idle client, broadcast, schedule its arrival (or,
+        for a churned dispatch, schedule the deadline at which the
+        server will notice the update never came)."""
+        busy = {f.cid for f in self.inflight.values()}
         idx = self.n_dispatched
-        cid = int(free[self._rng(TAG_SAMPLE, idx).integers(len(free))])
+        cid = self._sample_cid(idx, busy)
+        if cid is None:
+            return False
         rank = self._rank_for(cid)
-        start = self._bcast_memo.get(rank)
-        if start is None:
-            # one pack+unpack per (version, rank): the memo is cleared
-            # at every flush, and start trees are never mutated, so
-            # in-flight records may share them
-            start = flocora.broadcast(self.global_train, self.fcfg,
-                                      rank=self.wire.bcast_rank(rank))
-            self._bcast_memo[rank] = start
+        # churn is a trace draw keyed (seed, cid, dispatch_idx): known
+        # at dispatch, replayed identically on resume
+        dropped = self.trace.churned(cid, idx)
+        start = None
+        if not dropped:
+            start = self._bcast_memo.get(rank)
+            if start is None:
+                # one pack+unpack per (version, rank): the memo is
+                # cleared at every flush, and start trees are never
+                # mutated, so in-flight records may share them
+                start = flocora.broadcast(self.global_train, self.fcfg,
+                                          rank=self.wire.bcast_rank(rank))
+                self._bcast_memo[rank] = start
         down = self.wire.downlink_bytes(self.global_train, rank)
         self._down_cum += down
         self.wire.record_down(rank, down)
         # message sizes are symmetric, so the round trip on the trace's
         # wire is 2x the measured downlink
         t_arr = self.trace.arrival(cid, idx, rank, 2 * down, self.clock)
-        n_k = len(next(iter(self.client_data[cid].values())))
+        if dropped or self._pop is None:
+            # dropped dispatches never train, so their shard is never
+            # materialized (n_k unused)
+            n_k = 0 if dropped else \
+                len(next(iter(self.client_data[cid].values())))
+        else:
+            n_k = self._pop.shard_size
         self.inflight[idx] = _InFlight(cid, rank, self.version, idx,
-                                       self.clock, t_arr, n_k, start)
+                                       self.clock, t_arr, n_k, start,
+                                       dropped=dropped, down=down)
         heapq.heappush(self.heap, (t_arr, idx))
         self.n_dispatched += 1
         self.registry.set("fl.inflight", len(self.inflight))
         return True
 
+    def _expected_arrivals(self) -> int:
+        """Arrivals already buffered plus live (non-churned) dispatches
+        still in flight — the dispatch guard, so churn pulls in extra
+        dispatches instead of starving ``total_arrivals``."""
+        return self.n_arrived + sum(1 for r in self.inflight.values()
+                                    if not r.dropped)
+
     def _fill_pipeline(self) -> None:
         while (len(self.inflight) < self.acfg.concurrency
-               and self.n_dispatched < self.acfg.total_arrivals):
+               and self._expected_arrivals() < self.acfg.total_arrivals):
             if not self._dispatch_one():
                 break
 
@@ -321,7 +380,7 @@ class AsyncFLServer:
         by_rank: dict[int, list[int]] = {}
         for t, idx in self.heap:
             rec = self.inflight[idx]
-            if t <= horizon and rec.msg is None:
+            if t <= horizon and rec.msg is None and not rec.dropped:
                 by_rank.setdefault(rec.rank, []).append(idx)
         for rank in sorted(by_rank):
             idxs = sorted(by_rank[rank],
@@ -355,25 +414,42 @@ class AsyncFLServer:
             t_k = jax.tree.map(lambda x: x[k], trained)
             # density keys off the DISPATCH version (rec.version), a
             # pure function of checkpointed state — resumed runs emit
-            # byte-identical uplinks
-            rec.msg, _ = flocora.client_uplink(t_k, self.fcfg,
-                                               rnd=rec.version)
+            # byte-identical uplinks. DP (when configured) privatizes
+            # the delta vs rec.start with noise keyed by the dispatch
+            # ids, so concurrent dispatches of one client never share a
+            # noise draw and resume replays it bit-exactly
+            rec.msg, _ = flocora.client_uplink(
+                t_k, self.fcfg, rnd=rec.version, start=rec.start,
+                dp_key=(rec.version, rec.cid, rec.dispatch_idx),
+                dp_seed=self.acfg.seed)
             rec.loss = float(losses[k])
 
     # -- the event loop -----------------------------------------------------
     def step(self) -> Optional[dict]:
-        """Process ONE arrival event; returns the flush record when this
-        arrival filled the buffer, else None."""
+        """Process ONE event — an arrival, or a churned dispatch's
+        deadline; returns the flush record when an arrival filled the
+        buffer, else None."""
         if not self.heap:
             self._fill_pipeline()
             if not self.heap:
                 raise RuntimeError("no events left "
                                    f"({self.n_arrived} arrivals done)")
-        if self.inflight[self.heap[0][1]].msg is None:
+        head = self.inflight[self.heap[0][1]]
+        if head.msg is None and not head.dropped:
             self._compute_microbatch()
         t_arr, idx = heapq.heappop(self.heap)
         rec = self.inflight.pop(idx)
         self.clock = max(self.clock, t_arr)
+        if rec.dropped:
+            # CHURN: the update never arrives — the spent downlink was
+            # wasted, the client slot frees, a replacement dispatches
+            self.n_churned += 1
+            self._wasted_cum += rec.down
+            self.wire.record_wasted(rec.rank, rec.down, reason="churned")
+            self.registry.inc("fl.clients_churned")
+            self.registry.set("fl.inflight", len(self.inflight))
+            self._fill_pipeline()
+            return None
         staleness = self.version - rec.version
         density = self.fcfg.uplink_density(rec.version)
         up = self.wire.uplink_bytes(rec.rank, rec.msg, density) or 0
@@ -400,7 +476,7 @@ class AsyncFLServer:
         out = None
         if self.aggregator.buffered >= self.acfg.buffer_size:
             out = self._flush()
-        if self.n_dispatched < self.acfg.total_arrivals:
+        if self._expected_arrivals() < self.acfg.total_arrivals:
             self._dispatch_one()       # keep the pipeline full
         return out
 
@@ -475,15 +551,25 @@ class AsyncFLServer:
         self.registry.inc("fl.flushes")
         rec = {"version": self.version, "t_virtual": self.clock,
                "n_arrived": self.n_arrived, "n_flushed": n_buf,
+               "n_churned": self.n_churned,
                "client_loss": float(np.mean(losses)),
                "staleness_mean": float(np.mean(stales)),
                "staleness_max": int(max(stales)),
                "flush_ranks": ranks,
                "down_bytes": self._down_cum, "up_bytes": self._up_cum,
                "tcc_bytes": self.tcc_bytes,
+               # downlinks spent on dispatches that churned mid-round
+               "wasted_bytes": self._wasted_cum,
                # schema-uniform with the sync history (None = dense);
                # the density of the version this flush advanced FROM
                "uplink_density": density}
+        if self.fcfg.dp is not None:
+            # each flush is one Gaussian release of the aggregate;
+            # conservative RDP composition over versions so far
+            eps = gaussian_epsilon(self.fcfg.dp.noise_multiplier,
+                                   self.version, self.fcfg.dp.delta)
+            rec["dp_epsilon"] = eps
+            self.registry.set("fl.dp_epsilon", eps)
         self._flush_stats = []
         if self.eval_fn and self.n_flushes % self.acfg.eval_every == 0:
             rec.update({k: float(v) for k, v in
@@ -537,7 +623,9 @@ class AsyncFLServer:
         trees: dict[str, Any] = {"train": self.global_train}
         meta_if: dict[str, dict] = {}
         for idx, rec in self.inflight.items():
-            trees[f"inflight_{idx}"] = rec.start
+            if rec.start is not None:
+                # churned dispatches carry no start tree (never train)
+                trees[f"inflight_{idx}"] = rec.start
             if rec.msg is not None:
                 # computed uplinks ride along so a resumed run never
                 # recomputes them under a different micro-batch grouping
@@ -546,11 +634,13 @@ class AsyncFLServer:
                 "cid": rec.cid, "rank": rec.rank, "version": rec.version,
                 "t_dispatch": rec.t_dispatch, "t_arrival": rec.t_arrival,
                 "n_k": rec.n_k, "has_msg": rec.msg is not None,
-                "loss": rec.loss}
+                "loss": rec.loss, "dropped": rec.dropped,
+                "down": rec.down}
         self.ckpt.save(self.n_flushes, trees, metadata={
             "clock": self.clock, "version": self.version,
             "n_dispatched": self.n_dispatched,
             "n_arrived": self.n_arrived, "n_flushes": self.n_flushes,
+            "n_churned": self.n_churned, "wasted_cum": self._wasted_cum,
             "down_cum": self._down_cum, "up_cum": self._up_cum,
             "heap": sorted(self.heap), "inflight": meta_if,
             "history": self.history})
@@ -568,7 +658,8 @@ class AsyncFLServer:
         meta = man["metadata"]
         like: dict[str, Any] = {"train": self.global_train}
         for s, m in meta["inflight"].items():
-            like[f"inflight_{s}"] = self._start_template(m["rank"])
+            if not m.get("dropped", False):
+                like[f"inflight_{s}"] = self._start_template(m["rank"])
             if m["has_msg"]:
                 like[f"msg_{s}"] = self._msg_template(m["rank"],
                                                       m["version"])
@@ -579,6 +670,8 @@ class AsyncFLServer:
         self.n_dispatched = meta["n_dispatched"]
         self.n_arrived = meta["n_arrived"]
         self.n_flushes = meta["n_flushes"]
+        self.n_churned = meta.get("n_churned", 0)
+        self._wasted_cum = meta.get("wasted_cum", 0)
         self._down_cum = meta["down_cum"]
         self._up_cum = meta["up_cum"]
         self.history = list(meta["history"])
@@ -591,8 +684,9 @@ class AsyncFLServer:
             idx = int(s)
             self.inflight[idx] = _InFlight(
                 m["cid"], m["rank"], m["version"], idx, m["t_dispatch"],
-                m["t_arrival"], m["n_k"], trees[f"inflight_{s}"],
-                msg=trees.get(f"msg_{s}"), loss=m["loss"])
+                m["t_arrival"], m["n_k"], trees.get(f"inflight_{s}"),
+                msg=trees.get(f"msg_{s}"), loss=m["loss"],
+                dropped=m.get("dropped", False), down=m.get("down", 0))
         self.heap = [tuple(e) for e in meta["heap"]]
         heapq.heapify(self.heap)
         return True

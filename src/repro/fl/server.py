@@ -46,14 +46,22 @@ from repro.core import flocora, messages
 from repro.core.aggregation import Aggregator, ErrorFeedbackFedAvg, \
     FedAvgAggregator, FedBuffAggregator, ef_fold_dropped
 from repro.core.flocora import FLoCoRAConfig
+from repro.core.quant import gaussian_epsilon
 from repro.checkpoint import CheckpointManager
 from repro.fl.client import ClientConfig, cohort_steps, \
     make_cohort_trainer, pad_cohort_batches, pow2_pad, stack_cohort_batches
+from repro.fl.traces import FleetTrace
 from repro.obs import metrics as obsm
 from repro.obs import trace as obst
 from repro.utils.tree import tree_bytes
 
 Array = jax.Array
+
+# rng key domain for client dropout draws: keyed by (seed, round, cid)
+# like the trace latency draws, so a killed-and-resumed run reproduces
+# every failure outcome (the draws never touch the mutable sampler
+# stream). traces.py owns 0xA1/0xA2.
+TAG_FAILURE = 0xA3
 
 
 @dataclasses.dataclass
@@ -89,16 +97,24 @@ class WireAccounting:
     matches the cumulative TCC accounting."""
 
     def __init__(self, fcfg: FLoCoRAConfig,
-                 registry: Optional[obsm.MetricsRegistry] = None):
+                 registry: Optional[obsm.MetricsRegistry] = None,
+                 hetero: bool = False):
         self.fcfg = fcfg
         self.registry = obsm.get_registry(registry)
+        # hetero=True forces per-rank broadcast truncation even without a
+        # RankSchedule — a lazy Population carries its rank tiers itself
+        self.hetero = hetero
         self.down: dict[int, int] = {}
         self.up: dict[tuple[int, Optional[float]], int] = {}
+        self.wasted = 0          # bytes spent on transfers that never
+        #                          contributed (churned or straggled)
 
     def bcast_rank(self, rank: int) -> Optional[int]:
         """None keeps the uniform fleet's broadcast byte-identical to the
         classic path (no resize walk)."""
-        return rank if self.fcfg.rank_schedule is not None else None
+        if self.hetero or self.fcfg.rank_schedule is not None:
+            return rank
+        return None
 
     def downlink_bytes(self, global_train: Any, rank: int) -> int:
         got = self.down.get(rank)
@@ -130,6 +146,16 @@ class WireAccounting:
                           density=density)
         self.registry.inc("wire.uplinks", rank=rank, density=density)
 
+    def record_wasted(self, rank: int, nbytes: int,
+                      reason: str = "straggled") -> None:
+        """Bytes that were genuinely transferred but never contributed
+        to the global model: a straggler's discarded round trip, a
+        churned client's spent downlink. Already counted in
+        down/up_bytes — this is the waste-attribution view."""
+        self.wasted += nbytes
+        self.registry.inc("wire.wasted_bytes", nbytes, rank=rank,
+                          reason=reason)
+
 
 class FLServer:
     """Simulates the paper's FL loop (Fig. 1) over arbitrary models.
@@ -146,6 +172,7 @@ class FLServer:
                  ccfg: ClientConfig, fcfg: FLoCoRAConfig,
                  eval_fn: Optional[Callable] = None,
                  aggregator: Optional[Aggregator] = None,
+                 trace: Optional[FleetTrace] = None,
                  registry: Optional[obsm.MetricsRegistry] = None,
                  tracer: Optional[obst.Tracer] = None):
         self.frozen = model["frozen"]
@@ -154,6 +181,10 @@ class FLServer:
         self.client_data = client_data
         self.scfg, self.ccfg, self.fcfg = scfg, ccfg, fcfg
         self.eval_fn = eval_fn
+        # deadline cohorts: when a FleetTrace is given, straggler
+        # ordering uses TRACE arrival times (keyed by (seed, cid, round),
+        # resume-deterministic) instead of the mutable sampler stream
+        self.trace = trace
         # telemetry: None means the process defaults (disabled unless
         # obs.enable() ran) — both are injectable per server
         self.registry = obsm.get_registry(registry)
@@ -164,9 +195,23 @@ class FLServer:
         self.trainer = make_cohort_trainer(loss_fn, ccfg)
         # fixed schedule length across ALL clients: the cohort program's
         # shape never changes between rounds (only distinct cohort sizes
-        # K retrace), and small clients are masked, not over-trained
-        self.cohort_schedule_steps = cohort_steps(client_data, ccfg)
+        # K retrace), and small clients are masked, not over-trained.
+        # A lazy Population knows its own (O(1)) schedule; the eager path
+        # scans the materialized shards.
+        self.cohort_schedule_steps = client_data.schedule_steps(ccfg) \
+            if hasattr(client_data, "schedule_steps") \
+            else cohort_steps(client_data, ccfg)
         self.rank_schedule = fcfg.rank_schedule
+        # lazy Population fleets carry their own rank tiers (per device
+        # tier); a RankSchedule overrides when both are present
+        self._pop_ranks = None
+        if self.rank_schedule is None \
+                and hasattr(client_data, "rank_for"):
+            if client_data.max_rank > fcfg.rank:
+                raise ValueError(
+                    f"population max tier rank {client_data.max_rank} "
+                    f"exceeds the server rank {fcfg.rank}")
+            self._pop_ranks = client_data
         if self.rank_schedule is not None \
                 and self.rank_schedule.n_clients != scfg.n_clients:
             raise ValueError(
@@ -238,7 +283,10 @@ class FLServer:
         # TCC is derived from MEASURED emitted message sizes, cached per
         # client rank by the shared WireAccounting (also used by the
         # async engine)
-        self.wire = WireAccounting(fcfg, registry=self.registry)
+        hetero = self._pop_ranks is not None \
+            and self._pop_ranks.mixed_ranks
+        self.wire = WireAccounting(fcfg, registry=self.registry,
+                                   hetero=hetero)
         self.initial_model_bytes = tree_bytes(self.frozen)
         self._tcc_cum = self.initial_model_bytes
 
@@ -250,9 +298,22 @@ class FLServer:
 
     # -- per-rank wire accounting (measured, not shape math) ----------------
     def _rank_for(self, cid: int, rnd: int) -> int:
-        if self.rank_schedule is None:
-            return self.fcfg.rank
-        return self.rank_schedule.rank_for(cid, rnd)
+        if self.rank_schedule is not None:
+            return self.rank_schedule.rank_for(cid, rnd)
+        if self._pop_ranks is not None:
+            return self._pop_ranks.rank_for(cid)
+        return self.fcfg.rank
+
+    def _client_failed(self, rnd: int, cid: int) -> bool:
+        """Keyed dropout draw — a pure function of (seed, round, cid),
+        independent of the sampler stream and of checkpoint boundaries
+        (i.i.d. draws from ``self.rng`` made resumed runs diverge)."""
+        p = self.scfg.p_client_failure
+        if p <= 0.0:
+            return False
+        rng = np.random.default_rng(
+            [self.scfg.seed, TAG_FAILURE, rnd, cid])
+        return bool(rng.random() < p)
 
     def _bcast_rank(self, rank: int) -> Optional[int]:
         return self.wire.bcast_rank(rank)
@@ -322,11 +383,20 @@ class FLServer:
             down_bytes += b
             self.wire.record_down(r, b)
 
-        survivors = [int(cid) for cid in sampled
-                     if self.rng.random() >= scfg.p_client_failure]
+        survivors = [cid for cid in (int(c) for c in sampled)
+                     if not self._client_failed(rnd, cid)]
         self.registry.inc("fl.clients_dropped",
                           k_dispatch - len(survivors))
         self.registry.observe("fl.cohort_size", len(survivors))
+        # a dropped client's downlink was spent for nothing
+        wasted_bytes = 0
+        for cid in sampled:
+            cid = int(cid)
+            if cid not in survivors:
+                b = self._downlink_bytes(rank_of[cid])
+                wasted_bytes += b
+                self.wire.record_wasted(rank_of[cid], b,
+                                        reason="dropped")
         if not survivors:
             # an all-dropout round still consumed its downlinks; record
             # it so history (and TCC curves) never have gaps — with the
@@ -339,7 +409,11 @@ class FLServer:
                    "client_loss": float("nan"), "cohort_ranks": {},
                    "down_bytes": down_bytes, "up_bytes": 0,
                    "round_bytes": down_bytes, "tcc_bytes": self._tcc_cum,
+                   "wasted_bytes": wasted_bytes,
                    "uplink_density": density}
+            if fcfg.dp is not None:
+                rec["dp_epsilon"] = gaussian_epsilon(
+                    fcfg.dp.noise_multiplier, self.round, fcfg.dp.delta)
             self.history.append(rec)
             if self.ckpt and self.round % self.scfg.checkpoint_every == 0:
                 self.save()
@@ -352,7 +426,19 @@ class FLServer:
         buckets: dict[int, list[int]] = {}
         for cid in survivors:
             buckets.setdefault(rank_of[cid], []).append(cid)
-        latency = {cid: self.rng.exponential(1.0) for cid in survivors}
+        if self.trace is not None:
+            # DEADLINE COHORTS: arrival order comes from the fleet trace
+            # (availability wait + compute + transfer at the client's
+            # rank and measured message size), keyed (seed, cid, round) —
+            # a pure function of simulation ids, so straggler outcomes
+            # survive kill/resume bit-exactly
+            latency = {cid: self.trace.arrival(
+                cid, rnd, rank_of[cid],
+                2 * self._downlink_bytes(rank_of[cid]), 0.0)
+                for cid in survivors}
+        else:
+            latency = {cid: self.rng.exponential(1.0)
+                       for cid in survivors}
         ef = isinstance(self.aggregator, ErrorFeedbackFedAvg)
         results = []
         for r in sorted(buckets):
@@ -384,8 +470,12 @@ class FLServer:
                     t_k = jax.tree.map(lambda x: x[k], trained)
                     res = self.aggregator.residual(cid, t_k) \
                         if ef else None
-                    msg, res = flocora.client_uplink(t_k, fcfg, res,
-                                                     rnd=rnd)
+                    # start/dp_key engage only when fcfg.dp is set: the
+                    # client's DELTA vs its broadcast is clipped+noised
+                    # (keyed (round, cid)) before quantization
+                    msg, res = flocora.client_uplink(
+                        t_k, fcfg, res, rnd=rnd, start=g_bcast,
+                        dp_key=(rnd, cid), dp_seed=self.scfg.seed)
                     n_i = len(next(iter(datas[k].values())))
                     results.append((latency[cid], n_i, msg,
                                     float(losses[k]), r, cid, res))
@@ -399,11 +489,17 @@ class FLServer:
                 up_bytes += b
                 self.wire.record_up(r_i[4], b, density)
 
-        # straggler policy: first K arrivals win
+        # straggler policy: first K arrivals win; a straggler's whole
+        # round trip (downlink + discarded uplink) was wasted
         results.sort(key=lambda r: r[0])
         kept = results[:k_target]
         self.registry.inc("fl.clients_straggled",
                           len(results) - len(kept))
+        for r_i in results[k_target:]:
+            b = self._downlink_bytes(r_i[4]) \
+                + self._uplink_bytes(r_i[4], density=density)
+            wasted_bytes += b
+            self.wire.record_wasted(r_i[4], b, reason="straggled")
         if ef:
             # residuals commit AFTER the straggler cut: a kept client's
             # residual assumes delivery (e' = comp - deq(msg)); a
@@ -438,9 +534,18 @@ class FLServer:
                # measured heterogeneous sums, incl. the shared-once
                # initial model (replaces Eq. 2's 2 * one_way * rounds)
                "tcc_bytes": self._tcc_cum,
+               # dropout downlinks + straggler round trips this round
+               "wasted_bytes": wasted_bytes,
                # always present (None = dense uplink) so the history
                # schema is uniform across sparse/dense/all-dropout rounds
                "uplink_density": density}
+        if fcfg.dp is not None:
+            # conservative RDP composition over the rounds so far (one
+            # Gaussian release per participating client per round)
+            eps = gaussian_epsilon(fcfg.dp.noise_multiplier, self.round,
+                                   fcfg.dp.delta)
+            rec["dp_epsilon"] = eps
+            self.registry.set("fl.dp_epsilon", eps)
         if fcfg.qcfg.enabled or density is not None:
             rec["up_bytes_measured"] = self._uplink_bytes(
                 max(kept_ranks, key=kept_ranks.get), density=density)
